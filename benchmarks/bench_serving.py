@@ -1,0 +1,71 @@
+"""Serving benchmarks: paged KV engine throughput, prefix-sharing effect,
+Pallas kernels vs jnp reference wall-time (interpret mode; on-TPU numbers
+come from the roofline analysis instead)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.models.lm import LMConfig, init_params
+from repro.serving.engine import ServingEngine
+
+from .common import emit, timeit
+
+
+def bench_engine() -> None:
+    cfg = LMConfig(name="bench-serve", n_layers=2, d_model=128, n_heads=4,
+                   n_kv_heads=2, d_ff=256, vocab_size=257,
+                   param_dtype=jnp.float32, remat="none",
+                   attn_backend="ref")
+    params = init_params(cfg, jax.random.key(0))
+
+    def serve(shared_prefix: bool):
+        eng = ServingEngine(cfg, params, page_size=8, num_pages=256,
+                            max_batch=8)
+        base = list(range(1, 17))
+        for i in range(8):
+            prompt = base + [40 + i] if shared_prefix \
+                else [40 + i] + base[:-1] + [60 + i]
+            eng.submit(prompt, max_new_tokens=8)
+        done = eng.run()
+        assert len(done) == 8
+        return eng
+
+    t_unique = timeit(lambda: serve(False), warmup=1, iters=2)
+    t_shared = timeit(lambda: serve(True), warmup=1, iters=2)
+    eng = serve(True)
+    tokens = eng.metrics["decoded_tokens"]
+    emit("serving/unique_prompts", t_unique,
+         f"{tokens / t_unique:.1f} tok/s")
+    emit("serving/shared_prefix", t_shared,
+         f"{tokens / t_shared:.1f} tok/s; "
+         f"hit_rate={eng.stats()['prefix_hit_rate']:.2f}")
+
+
+def bench_kernels() -> None:
+    from repro.kernels import ops, ref
+    q = jax.random.normal(jax.random.key(1), (1, 4, 256, 128))
+    k = jax.random.normal(jax.random.key(2), (1, 2, 256, 128))
+    v = jax.random.normal(jax.random.key(3), (1, 2, 256, 128))
+
+    f_ref = jax.jit(lambda a, b, c: ref.flash_attention(a, b, c,
+                                                        causal=True))
+    f_ker = jax.jit(lambda a, b, c: ops.flash_attention(a, b, c, True,
+                                                        None, None))
+    t_ref = timeit(lambda: f_ref(q, k, v).block_until_ready(), iters=3)
+    t_ker = timeit(lambda: f_ker(q, k, v).block_until_ready(), iters=3)
+    emit("kernels/flash_ref_jnp", t_ref, "XLA-fused reference")
+    emit("kernels/flash_pallas_interpret", t_ker,
+         "interpret mode (CPU emulation; TPU perf via roofline)")
+
+
+def run(quick: bool = True) -> None:
+    bench_engine()
+    bench_kernels()
+
+
+if __name__ == "__main__":
+    from .common import header
+    header()
+    run()

@@ -1,0 +1,30 @@
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+
+import time
+from typing import Callable, Optional
+
+ROWS = []
+
+
+def timeit(fn: Callable, *, warmup: int = 2, iters: int = 5) -> float:
+    """Median seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    us = seconds * 1e6
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

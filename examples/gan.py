@@ -1,0 +1,97 @@
+"""Paper Listing 2, faithfully: GAN training with two models, two
+optimizers, and interleaved backward passes — the workload the paper uses
+to argue that "rigid APIs would struggle" while imperative code adapts.
+
+    PYTHONPATH=src python examples/gan.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+import repro
+import repro.nn as nn
+import repro.nn.functional as F
+import repro.optim as optim
+
+LATENT = 16
+DATA_DIM = 2   # 2-D Gaussian ring — visualizable toy distribution
+
+
+def create_generator():
+    return nn.Sequential(
+        nn.Linear(LATENT, 64), nn.ReLU(),
+        nn.Linear(64, 64), nn.ReLU(),
+        nn.Linear(64, DATA_DIM),
+    )
+
+
+def create_discriminator():
+    return nn.Sequential(
+        nn.Linear(DATA_DIM, 64), nn.ReLU(),
+        nn.Linear(64, 64), nn.ReLU(),
+        nn.Linear(64, 1),
+    )
+
+
+def get_noise(n=128):
+    return repro.randn(n, LATENT)
+
+
+def real_samples(n=128):
+    theta = np.random.rand(n) * 2 * np.pi
+    pts = np.stack([np.cos(theta), np.sin(theta)], 1) * 2.0
+    pts += np.random.randn(n, 2) * 0.05
+    return repro.tensor(pts.astype(np.float32))
+
+
+def loss(scores, is_real: bool):
+    target = repro.ones(scores.shape[0]) if is_real \
+        else repro.zeros(scores.shape[0])
+    return F.binary_cross_entropy_with_logits(scores.squeeze(-1), target)
+
+
+def main():
+    repro.manual_seed(0)
+    discriminator = create_discriminator()
+    generator = create_generator()
+    optimD = optim.Adam(discriminator.parameters(), lr=2e-3)
+    optimG = optim.Adam(generator.parameters(), lr=1e-3)
+
+    def step(real_sample):
+        # (1) Update Discriminator
+        optimD.zero_grad()
+        errD_real = loss(discriminator(real_sample), True)
+        errD_real.backward()
+        fake = generator(get_noise())
+        errD_fake = loss(discriminator(fake.detach()), False)
+        errD_fake.backward()
+        optimD.step()
+        # (2) Update Generator
+        optimG.zero_grad()
+        errG = loss(discriminator(fake), True)
+        errG.backward()
+        optimG.step()
+        return (float(errD_real.data) + float(errD_fake.data),
+                float(errG.data))
+
+    for it in range(400):
+        d_loss, g_loss = step(real_samples())
+        if it % 50 == 0:
+            fake = generator(get_noise(512)).numpy()
+            radius = np.sqrt((fake ** 2).sum(1))
+            print(f"iter {it:4d}  D={d_loss:.3f}  G={g_loss:.3f}  "
+                  f"fake radius={radius.mean():.2f}±{radius.std():.2f} "
+                  f"(target 2.00)")
+
+    fake = generator(get_noise(512)).numpy()
+    radius = np.sqrt((fake ** 2).sum(1))
+    print(f"final: generated ring radius {radius.mean():.2f} "
+          f"(real ring = 2.00)")
+    assert 1.0 < radius.mean() < 3.0, "GAN failed to move toward the ring"
+
+
+if __name__ == "__main__":
+    main()

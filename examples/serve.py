@@ -1,0 +1,65 @@
+"""Batched serving demo: continuous batching over the paged KV cache.
+
+Submits a burst of requests with shared system-prompt prefixes, runs the
+engine, and reports latency/throughput plus the allocator's prefix-cache
+and page-reuse statistics (the §5.3/§5.5 machinery at work).
+
+    PYTHONPATH=src python examples/serve.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import BlockSpec, LMConfig, init_params
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    cfg = LMConfig(name="serve-demo", n_layers=4, d_model=128, n_heads=8,
+                   n_kv_heads=2, d_ff=256, vocab_size=1024,
+                   pattern=(BlockSpec("attn", "dense"),),
+                   param_dtype=jnp.float32, remat="none",
+                   attn_backend="ref")
+    params = init_params(cfg, jax.random.key(0))
+    engine = ServingEngine(cfg, params, page_size=8, num_pages=512,
+                           max_batch=8)
+
+    system_prompt = list(range(100, 124))        # 24-token shared prefix
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(16):
+        user = rng.integers(1, 1024, size=rng.integers(4, 12)).tolist()
+        engine.submit(system_prompt + user, max_new_tokens=12)
+
+    finished = engine.run()
+    wall = time.perf_counter() - t0
+
+    lat_first = [r.first_token_at - r.submitted_at for r in finished]
+    lat_total = [r.finished_at - r.submitted_at for r in finished]
+    toks = sum(len(r.out_tokens) for r in finished)
+    print(f"served {len(finished)} requests, {toks} tokens "
+          f"in {wall:.2f}s ({toks / wall:.1f} tok/s)")
+    print(f"TTFT p50={np.median(lat_first)*1e3:.0f}ms  "
+          f"latency p50={np.median(lat_total)*1e3:.0f}ms")
+
+    s = engine.stats()
+    print(f"\npaged KV allocator:")
+    print(f"  pages: {s['pages_used']} in use / {s['pages_total']} "
+          f"(all released: {s['pages_free'] == s['pages_total']})")
+    print(f"  prefix cache hit rate: {s['prefix_hit_rate']:.1%}")
+    print(f"  copy-on-write page splits: {s['cow_copies']}")
+    print(f"  admission rejections (backpressure): "
+          f"{s['rejected_admissions']}")
+    sample = finished[0]
+    print(f"\nsample continuation: {sample.prompt[-4:]} -> "
+          f"{sample.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end distributed LM pretraining driver.
+
+Everything in one command: config selection (--arch picks any of the 10
+assigned architectures' smoke configs, or --size builds a GPT-style model
+from scratch), synthetic data pipeline with parallel workers, pjit train
+step with sharded optimizer state, async checkpointing with automatic
+restart, straggler watchdog.
+
+    # ~20M params, 200 steps, checkpoint/resume:
+    PYTHONPATH=src python examples/train_lm.py --size 20m --steps 200
+
+    # ~100M params (slower on CPU; the pod-scale path is the dry-run):
+    PYTHONPATH=src python examples/train_lm.py --size 100m --steps 300
+
+    # kill it mid-run and rerun: it resumes from the last checkpoint.
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.launch.train import train_loop
+from repro.models.lm import BlockSpec, LMConfig
+
+SIZES = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)  ≈ params
+    "2m": (4, 128, 4, 2, 512, 2048),
+    "20m": (8, 384, 8, 4, 1536, 8192),
+    "100m": (12, 768, 12, 4, 3072, 16384),
+}
+
+
+def build_config(size: str) -> LMConfig:
+    l, d, h, kv, ff, v = SIZES[size]
+    return LMConfig(
+        name=f"gpt-{size}", n_layers=l, d_model=d, n_heads=h,
+        n_kv_heads=kv, d_ff=ff, vocab_size=v,
+        pattern=(BlockSpec("attn", "dense"),),
+        param_dtype=jnp.float32, remat="none", attn_backend="ref",
+        tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=SIZES, default="2m")
+    ap.add_argument("--arch", choices=ARCHS, default=None,
+                    help="train an assigned arch's reduced config instead")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adam", "sgd", "adafactor"])
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.arch
+           else build_config(args.size))
+    print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}")
+
+    result = train_loop(
+        cfg, steps=args.steps, batch_size=args.batch_size,
+        seq_len=args.seq_len, optimizer=args.optimizer, lr=args.lr,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every, log_every=10)
+
+    print(f"\ndone: {result['steps']} steps in "
+          f"{result['wall_time_s']:.1f}s, final loss "
+          f"{result['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""TorchFlow (package ``repro``): an imperative-style, high-performance
+deep learning framework on JAX — a TPU-native reproduction of
+"PyTorch: An Imperative Style, High-Performance Deep Learning Library"
+(NeurIPS 2019).
+
+Torch-shaped public API::
+
+    import repro
+    x = repro.randn(4, 8, requires_grad=True)
+    y = (x @ x.T).sum()
+    y.backward()              # define-by-run tape (eager)
+    step = repro.compile(fn)  # fused/compiled path (jit bridge)
+"""
+
+from .core import *          # noqa: F401,F403  torch-like flat namespace
+from .core import allocator, autograd, fuse, stream  # noqa: F401
+from .core.tensor import Tensor  # noqa: F401
+
+__version__ = "0.1.0"
+
+
+def __getattr__(name):
+    # lazy subpackage access: repro.nn, repro.optim, repro.data, ...
+    import importlib
+    if name in ("nn", "optim", "data", "distributed", "models", "kernels",
+                "configs", "launch", "serving", "checkpoint", "utils"):
+        mod = importlib.import_module(f"repro.{name}")
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,87 @@
+"""Shared machinery for architecture configs.
+
+Every arch module defines:
+  CONFIG  — the exact published configuration (LMConfig)
+  SMOKE   — a reduced same-family config for CPU smoke tests
+  SHAPES  — {shape_name: ShapeSpec | SkipSpec}
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for the dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import LMConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    kind: str              # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+@dataclass(frozen=True)
+class SkipSpec:
+    reason: str
+
+
+TRAIN_4K = ShapeSpec("train", 4096, 256)
+PREFILL_32K = ShapeSpec("prefill", 32768, 32)
+DECODE_32K = ShapeSpec("decode", 32768, 128)
+LONG_500K = ShapeSpec("decode", 524288, 1)
+
+
+def lm_shapes(*, long_ok: bool, long_reason: str = "",
+              decode_ok: bool = True,
+              decode_reason: str = "") -> Dict[str, object]:
+    shapes: Dict[str, object] = {
+        "train_4k": TRAIN_4K,
+        "prefill_32k": PREFILL_32K,
+    }
+    shapes["decode_32k"] = DECODE_32K if decode_ok else SkipSpec(
+        decode_reason or "encoder-only architecture has no decode step")
+    if long_ok:
+        shapes["long_500k"] = LONG_500K
+    else:
+        shapes["long_500k"] = SkipSpec(
+            long_reason or "pure full-attention arch: 500k decode KV is "
+                           "quadratic-prefill territory; skipped per spec")
+    return shapes
+
+
+def input_specs(cfg: LMConfig, spec: ShapeSpec) -> Dict[str, object]:
+    """ShapeDtypeStructs for one (arch × shape) cell.
+
+    train/prefill: the full-sequence batch.  decode: one-token batch (the
+    cache is a separate argument produced by ``abstract_cache``).
+    """
+    b, s = spec.global_batch, spec.seq_len
+    if spec.kind == "train":
+        if cfg.input_mode == "embeddings":
+            return {
+                "embeds": SDS((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": SDS((b, s), jnp.int32),
+            }
+        return {
+            "tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32),
+        }
+    if spec.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            return {"embeds": SDS((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": SDS((b, s), jnp.int32)}
+    if spec.kind == "decode":
+        return {
+            "tokens": SDS((b, 1), jnp.int32),
+            "pos": SDS((), jnp.int32),
+        }
+    raise ValueError(spec.kind)

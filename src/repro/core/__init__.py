@@ -1,0 +1,54 @@
+"""repro.core — the eager runtime (the paper's contribution, in JAX).
+
+Layers:
+  tensor     — operator-overloaded Tensor, views, versioning, storage
+  autograd   — define-by-run tape, Function, no_grad, backward engine
+  allocator  — caching block allocator (512B rounding, per-stream pools)
+  stream     — streams/events: separate control flow from data flow
+  fuse       — the compiled path (jit bridge / TorchScript analogue)
+"""
+
+from . import allocator
+from . import autograd
+from . import fuse
+from . import stream
+from .autograd import Function, enable_grad, grad, is_grad_enabled, no_grad
+from .fuse import block_until_ready, compile, value_and_grad
+from .stream import Event, Stream, current_stream, default_stream, \
+    stream as stream_ctx, synchronize
+from .tensor import (
+    Tensor,
+    arange,
+    cat,
+    concat,
+    einsum,
+    empty,
+    eye,
+    from_numpy,
+    full,
+    logsumexp,
+    manual_seed,
+    matmul,
+    maximum,
+    minimum,
+    normal,
+    one_hot,
+    ones,
+    ones_like,
+    rand,
+    randint,
+    randn,
+    softmax,
+    split,
+    stack,
+    take_along_dim,
+    tensor,
+    tril,
+    triu,
+    uniform,
+    where,
+    zeros,
+    zeros_like,
+)
+
+

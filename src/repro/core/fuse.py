@@ -1,0 +1,100 @@
+"""The compiled path (paper §5.1/§7 "PyTorch JIT" → TorchScript analogue).
+
+Eager mode pays per-op Python dispatch, exactly as PyTorch does; the paper's
+answer is a JIT that runs the model outside the interpreter.  On JAX the
+natural analogue is ``jax.jit``: because :class:`repro.Tensor` is a
+registered pytree, *unmodified* eager model code can be traced once and
+replayed as a single fused XLA executable — Python overhead disappears and
+XLA fuses across op boundaries.
+
+``repro.compile(fn)`` is therefore the ``torch.jit.trace``/``torch.compile``
+of this framework, with the same contract: tensor compute is captured,
+Python control flow is resolved at trace time, and retracing happens per
+input signature (shape/dtype), cached thereafter.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+
+from .tensor import Tensor
+
+
+def compile(fn: Optional[Callable] = None, *, static_argnums=(),
+            donate_argnums=(), **jit_kwargs) -> Callable:
+    """Trace-and-fuse an eager function (models, train steps, ...).
+
+    Works on any function whose tensor arguments are ``repro.Tensor`` /
+    pytrees thereof.  Inside the trace the autograd tape is automatically
+    disabled (operands are tracers); use :func:`value_and_grad` to compile
+    a differentiated step.
+    """
+
+    def wrap(f: Callable) -> Callable:
+        jitted = jax.jit(f, static_argnums=static_argnums,
+                         donate_argnums=donate_argnums, **jit_kwargs)
+
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            return jitted(*args, **kwargs)
+
+        wrapper._jitted = jitted  # expose for .lower()/.compile() tooling
+        return wrapper
+
+    if fn is not None:
+        return wrap(fn)
+    return wrap
+
+
+def value_and_grad(fn: Callable, argnums=0, has_aux: bool = False) -> Callable:
+    """Functional gradient of an eager-style function, for the compiled
+    path.  Differentiation happens in XLA (JAX AD), not on the tape —
+    mirroring how TorchScript code is differentiated by its own engine.
+    """
+    def scalar_fn(*args, **kwargs):
+        out = fn(*args, **kwargs)
+        if has_aux:
+            out, aux = out
+            return (out.data if isinstance(out, Tensor) else out), aux
+        return out.data if isinstance(out, Tensor) else out
+
+    vg = jax.value_and_grad(scalar_fn, argnums=argnums, has_aux=has_aux)
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        return vg(*args, **kwargs)
+
+    return wrapper
+
+
+def grad(fn: Callable, argnums=0, has_aux: bool = False) -> Callable:
+    def scalar_fn(*args, **kwargs):
+        out = fn(*args, **kwargs)
+        if has_aux:
+            out, aux = out
+            return (out.data if isinstance(out, Tensor) else out), aux
+        return out.data if isinstance(out, Tensor) else out
+
+    g = jax.grad(scalar_fn, argnums=argnums, has_aux=has_aux)
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        return g(*args, **kwargs)
+
+    return wrapper
+
+
+def block_until_ready(tree: Any) -> Any:
+    """Join on async-dispatched work for a pytree of Tensors/arrays."""
+    def _block(x):
+        if isinstance(x, Tensor):
+            x.data.block_until_ready()
+        elif isinstance(x, jax.Array):
+            x.block_until_ready()
+        return x
+
+    return jax.tree_util.tree_map(
+        _block, tree, is_leaf=lambda x: isinstance(x, Tensor))

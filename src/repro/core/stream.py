@@ -1,0 +1,162 @@
+"""Streams and events (paper §5.2): separate control and data flow.
+
+PyTorch queues CUDA kernels onto hardware FIFOs so host control flow runs
+ahead of device compute.  JAX's runtime already dispatches asynchronously —
+``jnp`` calls return futures-like Arrays immediately and only
+``block_until_ready`` joins.  This module makes that implicit machinery an
+explicit, PyTorch-shaped API:
+
+* ``Stream`` — an ordered work queue.  Eager ops dispatch on the *current*
+  stream; tensors remember their stream so the allocator can keep one block
+  pool per stream (§5.3) and flag cross-stream reuse.
+* ``Event`` — record/wait/synchronize for cross-stream ordering.
+* ``current_stream() / stream(s)`` — context manager mirroring
+  ``torch.cuda.stream``.
+
+On a single host device all streams map onto the one XLA dispatch queue, so
+``wait_stream`` degenerates to ordering bookkeeping — but the *semantics*
+(allocator pools, cross-stream sync requirements, per-stream pending work)
+are fully exercised and tested, and carry over unchanged to a multi-queue
+backend.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, List, Optional
+
+import jax
+
+from . import allocator as _alloc
+
+
+class Stream:
+    _next_id = 0
+    _lock = threading.Lock()
+
+    def __init__(self, priority: int = 0):
+        with Stream._lock:
+            self.stream_id = Stream._next_id
+            Stream._next_id += 1
+        self.priority = priority
+        # Tail of asynchronously dispatched work: jax Arrays not yet known
+        # to be ready.  Bounded ring so host can run ahead without leaking.
+        self._pending: List[Any] = []
+        self._max_pending = 64
+
+    # -- dispatch ------------------------------------------------------
+    def enqueue(self, *arrays: Any) -> None:
+        """Note asynchronously-dispatched results on this stream."""
+        for a in arrays:
+            if isinstance(a, jax.Array):
+                self._pending.append(a)
+        if len(self._pending) > self._max_pending:
+            # keep the queue bounded: oldest work is almost surely done
+            del self._pending[: -self._max_pending]
+
+    def synchronize(self) -> None:
+        """Block the host until all work on this stream has completed."""
+        for a in self._pending:
+            try:
+                a.block_until_ready()
+            except Exception:
+                pass
+        self._pending.clear()
+        _alloc.device_allocator().synchronize()
+
+    def query(self) -> bool:
+        """True if all submitted work has completed."""
+        for a in self._pending:
+            if not a.is_ready():
+                return False
+        return True
+
+    def wait_stream(self, other: "Stream") -> None:
+        """Make future work on self wait for work already queued on other."""
+        other.synchronize()  # single-queue backend: conservative join
+
+    def record_event(self, event: Optional["Event"] = None) -> "Event":
+        event = event or Event()
+        event.record(self)
+        return event
+
+    def wait_event(self, event: "Event") -> None:
+        event.wait(self)
+
+    def __repr__(self):
+        return f"Stream(id={self.stream_id}, pending={len(self._pending)})"
+
+
+class Event:
+    def __init__(self, enable_timing: bool = False):
+        self.enable_timing = enable_timing
+        self._recorded: Optional[List[Any]] = None
+        self._time: Optional[float] = None
+
+    def record(self, stream: Optional[Stream] = None) -> None:
+        stream = stream or current_stream()
+        self._recorded = list(stream._pending)
+        if self.enable_timing:
+            self._time = time.perf_counter()
+
+    def wait(self, stream: Optional[Stream] = None) -> None:
+        # Future work on `stream` must observe `self`'s work: join here.
+        self.synchronize()
+
+    def synchronize(self) -> None:
+        if self._recorded:
+            for a in self._recorded:
+                try:
+                    a.block_until_ready()
+                except Exception:
+                    pass
+            self._recorded = None
+
+    def query(self) -> bool:
+        if not self._recorded:
+            return True
+        return all(a.is_ready() for a in self._recorded)
+
+    def elapsed_time(self, end: "Event") -> float:
+        """Milliseconds between two timing events."""
+        if self._time is None or end._time is None:
+            raise RuntimeError("events must be created with enable_timing=True")
+        return (end._time - self._time) * 1e3
+
+
+# -- current-stream state ------------------------------------------------
+_tls = threading.local()
+_default_stream = Stream()
+
+
+def default_stream() -> Stream:
+    return _default_stream
+
+
+def current_stream() -> Stream:
+    return getattr(_tls, "stream", _default_stream)
+
+
+class stream:
+    """Context manager: ``with repro.stream(s): ...``"""
+
+    def __init__(self, s: Stream):
+        self._s = s
+        self._prev: Optional[Stream] = None
+
+    def __enter__(self) -> Stream:
+        self._prev = current_stream()
+        _tls.stream = self._s
+        return self._s
+
+    def __exit__(self, *exc) -> None:
+        _tls.stream = self._prev
+
+
+def synchronize() -> None:
+    """Device-wide synchronize (torch.cuda.synchronize analogue)."""
+    _default_stream.synchronize()
+    s = getattr(_tls, "stream", None)
+    if s is not None and s is not _default_stream:
+        s.synchronize()

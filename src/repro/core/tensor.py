@@ -1,0 +1,967 @@
+"""The eager Tensor (paper §4, §5.5).
+
+A :class:`Tensor` wraps a ``jax.Array`` and provides the imperative,
+operator-overloaded programming model of the paper:
+
+* every op executes immediately (async-dispatched on the current stream),
+* the autograd tape records a vjp node per op (``jax.vjp`` supplies the
+  exact derivative closure),
+* in-place ops mutate through a shared :class:`VersionCounter` so the
+  engine can detect use-after-mutate (§4.3),
+* storage is refcounted — Python's own refcounting (the paper's CPython
+  integration argument, §5.5) drives immediate frees back into the caching
+  allocator,
+* Tensors are registered pytrees, so the same model code runs eagerly *and*
+  under ``jax.jit``/``pjit`` — the TorchScript-analogue compiled path.
+
+When any operand is a JAX tracer (i.e. we are inside a ``jit`` trace), the
+tape is skipped and ops lower straight to XLA; differentiation of compiled
+code is handled by JAX's AD.  This is the eager/compiled split of the paper.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import allocator as _alloc
+from . import stream as _stream
+from .autograd import (
+    Node,
+    VersionCounter,
+    backward as _backward,
+    is_grad_enabled,
+    no_grad,
+)
+
+Array = jax.Array
+DTypeLike = Any
+
+# ----------------------------------------------------------------------
+# Storage: refcounted allocation accounting (§5.5)
+# ----------------------------------------------------------------------
+
+class Storage:
+    """Owns one accounting block in the caching allocator.
+
+    Python's refcounting destroys this object the moment the last Tensor
+    (or autograd closure) referencing it dies, returning the block to the
+    allocator pool immediately — no deferred GC (§5.5).
+    """
+
+    __slots__ = ("nbytes", "_block", "stream_id")
+
+    def __init__(self, nbytes: int, stream_id: int):
+        self.nbytes = nbytes
+        self.stream_id = stream_id
+        self._block = _alloc.device_allocator().allocate(nbytes, stream_id)
+
+    def __del__(self):
+        try:
+            _alloc.device_allocator().free(self._block)
+        except Exception:
+            pass
+
+
+def _nbytes_of(data: Array) -> int:
+    try:
+        return int(np.prod(data.shape)) * data.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _is_tracer(x: Any) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+# ----------------------------------------------------------------------
+# Tensor
+# ----------------------------------------------------------------------
+
+class Tensor:
+    __slots__ = (
+        "_data",
+        "requires_grad",
+        "grad",
+        "grad_fn",
+        "_output_index",
+        "_version",
+        "_storage",
+        "_base",        # for views: the viewed-into tensor
+        "_view_index",  # the indexing expression creating the view
+        "__weakref__",
+    )
+
+    def __init__(self, data: Any, requires_grad: bool = False,
+                 _storage: Optional[Storage] = None,
+                 _version: Optional[VersionCounter] = None):
+        if isinstance(data, Tensor):
+            data = data._data
+        if not isinstance(data, (jax.Array, jax.core.Tracer)):
+            data = jnp.asarray(data)
+        if requires_grad and not jnp.issubdtype(data.dtype, jnp.inexact):
+            raise RuntimeError(
+                "Only Tensors of floating point and complex dtype can "
+                "require gradients"
+            )
+        self._data = data
+        self.requires_grad = requires_grad
+        self.grad: Optional[Tensor] = None
+        self.grad_fn: Optional[Node] = None
+        self._output_index = 0
+        self._version = _version if _version is not None else VersionCounter()
+        self._base: Optional[Tensor] = None
+        self._view_index = None
+        if _storage is not None:
+            self._storage = _storage
+        elif _is_tracer(data):
+            self._storage = None  # tracing: XLA owns memory
+        else:
+            self._storage = Storage(
+                _nbytes_of(data), _stream.current_stream().stream_id
+            )
+
+    # -- basic properties ----------------------------------------------
+    @property
+    def data(self) -> Array:
+        return self._data
+
+    @data.setter
+    def data(self, value):
+        self._data = value._data if isinstance(value, Tensor) else value
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self._data.shape)
+
+    @property
+    def dtype(self):
+        return self._data.dtype
+
+    @property
+    def ndim(self) -> int:
+        return self._data.ndim
+
+    @property
+    def size_bytes(self) -> int:
+        return _nbytes_of(self._data)
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.grad_fn is None
+
+    @property
+    def device(self):
+        try:
+            return next(iter(self._data.devices()))
+        except Exception:
+            return jax.devices()[0]
+
+    def size(self, dim: Optional[int] = None):
+        return self.shape if dim is None else self.shape[dim]
+
+    def numel(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    def dim(self) -> int:
+        return self.ndim
+
+    def numpy(self) -> np.ndarray:
+        return np.asarray(self._data)
+
+    def item(self):
+        return self._data.item()
+
+    def tolist(self):
+        return np.asarray(self._data).tolist()
+
+    def __len__(self):
+        return self.shape[0]
+
+    def __repr__(self):
+        grad_part = ""
+        if self.grad_fn is not None:
+            grad_part = f", grad_fn=<{self.grad_fn.name}>"
+        elif self.requires_grad:
+            grad_part = ", requires_grad=True"
+        if _is_tracer(self._data):
+            return f"Tensor(<traced {self.shape} {self.dtype}>{grad_part})"
+        return f"Tensor({np.asarray(self._data)!r}{grad_part})"
+
+    def __hash__(self):
+        return id(self)
+
+    def __bool__(self):
+        return bool(self._data)
+
+    # -- autograd --------------------------------------------------------
+    def backward(self, gradient: Optional["Tensor"] = None,
+                 retain_graph: bool = False) -> None:
+        _backward(self, [gradient] if gradient is not None else None,
+                  retain_graph=retain_graph)
+
+    def _accumulate_grad(self, g: Array) -> None:
+        if self.grad is None:
+            self.grad = Tensor(g)
+        else:
+            self.grad = Tensor(self.grad._data + g)
+
+    def detach(self) -> "Tensor":
+        t = Tensor(self._data, _storage=self._storage,
+                   _version=self._version)
+        return t
+
+    def detach_(self) -> "Tensor":
+        self.grad_fn = None
+        self.requires_grad = False
+        return self
+
+    def requires_grad_(self, flag: bool = True) -> "Tensor":
+        if flag and not jnp.issubdtype(self.dtype, jnp.inexact):
+            raise RuntimeError(
+                "Only Tensors of floating point and complex dtype can "
+                "require gradients"
+            )
+        self.requires_grad = flag
+        return self
+
+    def clone(self) -> "Tensor":
+        return _apply_op("clone", lambda x: x + 0, self)
+
+    def retain_grad(self) -> "Tensor":
+        # non-leaf grads: wrap identity so engine treats as leaf-like sink
+        self.requires_grad = True
+        return self
+
+    # -- dtype / device movement ----------------------------------------
+    def astype(self, dtype) -> "Tensor":
+        return _apply_op("astype", lambda x: x.astype(dtype), self)
+
+    def to(self, dtype=None) -> "Tensor":
+        if dtype is None:
+            return self
+        return self.astype(dtype)
+
+    def float(self):
+        return self.astype(jnp.float32)
+
+    def bfloat16(self):
+        return self.astype(jnp.bfloat16)
+
+    def half(self):
+        return self.astype(jnp.float16)
+
+    def int(self):
+        return self.astype(jnp.int32)
+
+    def bool(self):
+        return self.astype(jnp.bool_)
+
+    def cpu(self):
+        return self
+
+    def cuda(self):
+        return self
+
+    # -- arithmetic (operator overloading: the define-by-run surface) ----
+    def __add__(self, other):
+        return add(self, other)
+
+    __radd__ = __add__
+
+    def __sub__(self, other):
+        return sub(self, other)
+
+    def __rsub__(self, other):
+        return sub(_coerce(other, like=self), self)
+
+    def __mul__(self, other):
+        return mul(self, other)
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, other):
+        return div(self, other)
+
+    def __rtruediv__(self, other):
+        return div(_coerce(other, like=self), self)
+
+    def __pow__(self, other):
+        return pow_(self, other)
+
+    def __rpow__(self, other):
+        return pow_(_coerce(other, like=self), self)
+
+    def __matmul__(self, other):
+        return matmul(self, other)
+
+    def __rmatmul__(self, other):
+        return matmul(_coerce(other, like=self), self)
+
+    def __neg__(self):
+        return _apply_op("neg", lambda x: -x, self)
+
+    def __abs__(self):
+        return _apply_op("abs", jnp.abs, self)
+
+    def __mod__(self, other):
+        return _apply_op("mod", jnp.mod, self, _coerce(other, like=self))
+
+    # comparisons (non-differentiable)
+    def __eq__(self, other):  # type: ignore[override]
+        return Tensor(self._data == _raw(other))
+
+    def __ne__(self, other):  # type: ignore[override]
+        return Tensor(self._data != _raw(other))
+
+    def __lt__(self, other):
+        return Tensor(self._data < _raw(other))
+
+    def __le__(self, other):
+        return Tensor(self._data <= _raw(other))
+
+    def __gt__(self, other):
+        return Tensor(self._data > _raw(other))
+
+    def __ge__(self, other):
+        return Tensor(self._data >= _raw(other))
+
+    # -- indexing ---------------------------------------------------------
+    def __getitem__(self, index) -> "Tensor":
+        index = _raw_index(index)
+        out = _apply_op("getitem", lambda x: x[index], self)
+        # basic-indexing results are views: share version counter so
+        # mutation through either side is detected / written through.
+        if _is_basic_index(index):
+            out._version = self._version
+            out._base = self._base if self._base is not None else self
+            out._view_index = index
+            out._storage = self._storage
+        return out
+
+    def __setitem__(self, index, value) -> None:
+        index = _raw_index(index)
+        self._inplace_guard("__setitem__")
+        val = _raw(value)
+        self._write_through(lambda x: x.at[index].set(val))
+
+    # -- in-place ops (mutation; §4.3 versioning) -------------------------
+    def _inplace_guard(self, opname: str) -> None:
+        if self.requires_grad and self.grad_fn is None and is_grad_enabled():
+            raise RuntimeError(
+                f"a leaf Variable that requires grad is being used in an "
+                f"in-place operation ({opname})"
+            )
+
+    def _write_through(self, fn: Callable[[Array], Array]) -> None:
+        """Apply ``fn`` to this tensor's data, writing through views to the
+        base storage, and bump the shared version counter."""
+        if self._base is not None:
+            base = self._base
+            idx = self._view_index
+            new_base = base._data.at[idx].set(fn(base._data[idx]))
+            base._data = new_base
+            self._data = new_base[idx]
+        else:
+            self._data = fn(self._data)
+        self._version.bump()
+
+    def _inplace_binary(self, opname: str, fn, other, alpha=None):
+        self._inplace_guard(opname)
+        o = _raw(other)
+        if alpha is not None:
+            o = o * alpha
+        if (is_grad_enabled()
+                and self.grad_fn is not None
+                and jnp.issubdtype(self.dtype, jnp.inexact)
+                and not _is_tracer(self._data)):
+            # differentiable in-place: record as out-of-place op against a
+            # snapshot of the pre-mutation value (so the new node points at
+            # the OLD grad_fn, not at itself), then mutate this object.
+            # The version bump happens BEFORE the node records its saved
+            # versions: this very op is consistent with the new version,
+            # while any later mutation is still caught.
+            self._version.bump()
+            snapshot = Tensor(self._data, _storage=self._storage,
+                              _version=self._version)
+            snapshot.grad_fn = self.grad_fn
+            snapshot._output_index = self._output_index
+            snapshot.requires_grad = self.requires_grad
+            other_t = other if isinstance(other, Tensor) else Tensor(o)
+            res = _apply_op(opname, fn, snapshot, other_t)
+            self._data = res._data
+            self.grad_fn = res.grad_fn
+            self._output_index = res._output_index
+            # the mutated tensor starts a fresh version lineage: the
+            # recorded node holds the OLD counter via the snapshot, so
+            # chained differentiable in-place ops don't trip each other
+            self._version = VersionCounter()
+        else:
+            self._write_through(lambda x: fn(x, o))
+        return self
+
+    def add_(self, other, alpha=None):
+        return self._inplace_binary("add_", jnp.add, other, alpha)
+
+    def sub_(self, other, alpha=None):
+        return self._inplace_binary("sub_", jnp.subtract, other, alpha)
+
+    def mul_(self, other):
+        return self._inplace_binary("mul_", jnp.multiply, other)
+
+    def div_(self, other):
+        return self._inplace_binary("div_", jnp.divide, other)
+
+    def zero_(self):
+        self._write_through(lambda x: jnp.zeros_like(x))
+        return self
+
+    def fill_(self, value):
+        self._write_through(lambda x: jnp.full_like(x, value))
+        return self
+
+    def copy_(self, other):
+        src = _raw(other)
+        self._write_through(lambda x: jnp.broadcast_to(src, x.shape).astype(x.dtype))
+        return self
+
+    def clamp_(self, min=None, max=None):
+        self._write_through(lambda x: jnp.clip(x, min, max))
+        return self
+
+    # -- shape ops ---------------------------------------------------------
+    def reshape(self, *shape) -> "Tensor":
+        shape = _norm_shape(shape)
+        return _apply_op("reshape", lambda x: x.reshape(shape), self)
+
+    view = reshape
+
+    def transpose(self, dim0: int, dim1: int) -> "Tensor":
+        perm = list(range(self.ndim))
+        perm[dim0], perm[dim1] = perm[dim1], perm[dim0]
+        return _apply_op("transpose", lambda x: jnp.transpose(x, perm), self)
+
+    def permute(self, *dims) -> "Tensor":
+        dims = _norm_shape(dims)
+        return _apply_op("permute", lambda x: jnp.transpose(x, dims), self)
+
+    @property
+    def T(self) -> "Tensor":
+        return _apply_op("T", lambda x: x.T, self)
+
+    def squeeze(self, dim: Optional[int] = None) -> "Tensor":
+        return _apply_op("squeeze", lambda x: jnp.squeeze(x, dim), self)
+
+    def unsqueeze(self, dim: int) -> "Tensor":
+        return _apply_op("unsqueeze", lambda x: jnp.expand_dims(x, dim), self)
+
+    def flatten(self, start_dim: int = 0, end_dim: int = -1) -> "Tensor":
+        shape = self.shape
+        end = end_dim % self.ndim
+        new = shape[:start_dim] + (-1,) + shape[end + 1:]
+        return self.reshape(new)
+
+    def expand(self, *sizes) -> "Tensor":
+        sizes = _norm_shape(sizes)
+        tgt = tuple(
+            s if s != -1 else self.shape[i - (len(sizes) - self.ndim)]
+            for i, s in enumerate(sizes)
+        )
+        return _apply_op("expand", lambda x: jnp.broadcast_to(x, tgt), self)
+
+    def repeat(self, *reps) -> "Tensor":
+        reps = _norm_shape(reps)
+        return _apply_op("repeat", lambda x: jnp.tile(x, reps), self)
+
+    def chunk(self, chunks: int, dim: int = 0):
+        return split(self, self.shape[dim] // chunks, dim)
+
+    def split(self, size: int, dim: int = 0):
+        return split(self, size, dim)
+
+    # -- math methods -------------------------------------------------------
+    def sum(self, dim=None, keepdim: bool = False):
+        return _apply_op("sum", lambda x: jnp.sum(x, axis=dim,
+                                                  keepdims=keepdim), self)
+
+    def mean(self, dim=None, keepdim: bool = False):
+        return _apply_op("mean", lambda x: jnp.mean(x, axis=dim,
+                                                    keepdims=keepdim), self)
+
+    def var(self, dim=None, keepdim: bool = False, unbiased: bool = True):
+        ddof = 1 if unbiased else 0
+        return _apply_op("var", lambda x: jnp.var(x, axis=dim, ddof=ddof,
+                                                  keepdims=keepdim), self)
+
+    def std(self, dim=None, keepdim: bool = False, unbiased: bool = True):
+        ddof = 1 if unbiased else 0
+        return _apply_op("std", lambda x: jnp.std(x, axis=dim, ddof=ddof,
+                                                  keepdims=keepdim), self)
+
+    def max(self, dim=None, keepdim: bool = False):
+        if dim is None:
+            return _apply_op("max", jnp.max, self)
+        values = _apply_op(
+            "max", lambda x: jnp.max(x, axis=dim, keepdims=keepdim), self)
+        indices = Tensor(jnp.argmax(self._data, axis=dim))
+        return values, indices
+
+    def min(self, dim=None, keepdim: bool = False):
+        if dim is None:
+            return _apply_op("min", jnp.min, self)
+        values = _apply_op(
+            "min", lambda x: jnp.min(x, axis=dim, keepdims=keepdim), self)
+        indices = Tensor(jnp.argmin(self._data, axis=dim))
+        return values, indices
+
+    def argmax(self, dim=None):
+        return Tensor(jnp.argmax(self._data, axis=dim))
+
+    def argmin(self, dim=None):
+        return Tensor(jnp.argmin(self._data, axis=dim))
+
+    def prod(self, dim=None, keepdim: bool = False):
+        return _apply_op("prod", lambda x: jnp.prod(x, axis=dim,
+                                                    keepdims=keepdim), self)
+
+    def cumsum(self, dim: int):
+        return _apply_op("cumsum", lambda x: jnp.cumsum(x, axis=dim), self)
+
+    def exp(self):
+        return _apply_op("exp", jnp.exp, self)
+
+    def log(self):
+        return _apply_op("log", jnp.log, self)
+
+    def sqrt(self):
+        return _apply_op("sqrt", jnp.sqrt, self)
+
+    def rsqrt(self):
+        return _apply_op("rsqrt", lambda x: jax.lax.rsqrt(x), self)
+
+    def abs(self):
+        return _apply_op("abs", jnp.abs, self)
+
+    def sin(self):
+        return _apply_op("sin", jnp.sin, self)
+
+    def cos(self):
+        return _apply_op("cos", jnp.cos, self)
+
+    def tanh(self):
+        return _apply_op("tanh", jnp.tanh, self)
+
+    def sigmoid(self):
+        return _apply_op("sigmoid", jax.nn.sigmoid, self)
+
+    def relu(self):
+        return _apply_op("relu", jax.nn.relu, self)
+
+    def erf(self):
+        return _apply_op("erf", jax.scipy.special.erf, self)
+
+    def clamp(self, min=None, max=None):
+        return _apply_op("clamp", lambda x: jnp.clip(x, min, max), self)
+
+    def softmax(self, dim: int = -1):
+        return _apply_op("softmax",
+                         lambda x: jax.nn.softmax(x, axis=dim), self)
+
+    def log_softmax(self, dim: int = -1):
+        return _apply_op("log_softmax",
+                         lambda x: jax.nn.log_softmax(x, axis=dim), self)
+
+    def masked_fill(self, mask, value):
+        m = _raw(mask)
+        return _apply_op("masked_fill",
+                         lambda x: jnp.where(m, value, x), self)
+
+    def matmul(self, other):
+        return matmul(self, other)
+
+    mm = matmul
+    bmm = matmul
+
+    def dot(self, other):
+        return matmul(self, other)
+
+    def record_stream(self, s: "_stream.Stream") -> None:
+        """Mark this tensor as used on stream ``s`` (cross-stream safety,
+        §5.3): its storage free will then require a sync before reuse."""
+        if self._storage is not None:
+            _alloc.device_allocator().free  # accounting path exists
+            self._storage.stream_id = s.stream_id
+
+
+# ----------------------------------------------------------------------
+# op dispatcher: forward + tape recording
+# ----------------------------------------------------------------------
+
+def _raw(x: Any) -> Any:
+    return x._data if isinstance(x, Tensor) else x
+
+
+def _raw_index(index):
+    if isinstance(index, tuple):
+        return tuple(_raw(i) for i in index)
+    return _raw(index)
+
+
+def _is_basic_index(index) -> bool:
+    items = index if isinstance(index, tuple) else (index,)
+    return all(isinstance(i, (int, slice, type(Ellipsis), type(None)))
+               for i in items)
+
+
+def _coerce(x: Any, like: Optional[Tensor] = None) -> Tensor:
+    if isinstance(x, Tensor):
+        return x
+    arr = jnp.asarray(x)
+    if (like is not None and jnp.issubdtype(like.dtype, jnp.inexact)
+            and not jnp.issubdtype(arr.dtype, jnp.inexact)):
+        arr = arr.astype(like.dtype)
+    elif (like is not None and jnp.issubdtype(like.dtype, jnp.inexact)
+            and arr.dtype != like.dtype and np.isscalar(x)):
+        arr = arr.astype(like.dtype)
+    return Tensor(arr)
+
+
+def _wrap_outputs(raw, node: Optional[Node]):
+    """Wrap raw jnp outputs in Tensors attached to ``node``."""
+    single = not isinstance(raw, tuple)
+    outs = (raw,) if single else raw
+    tensors = []
+    for i, o in enumerate(outs):
+        t = Tensor(o)
+        if node is not None:
+            t.grad_fn = node
+            t._output_index = i
+        tensors.append(t)
+    _stream.current_stream().enqueue(*[t._data for t in tensors])
+    return tensors[0] if single else tuple(tensors)
+
+
+def _apply_op(name: str, fn: Callable, *tensors: Tensor,
+              num_outputs: int = 1):
+    """Execute ``fn`` over tensor data; record a tape node when needed.
+
+    This is the single funnel for every differentiable eager op.  Inside a
+    ``jax.jit`` trace (tracer operands) the tape is skipped entirely and the
+    op lowers to XLA — the compiled path differentiates via JAX AD.
+    """
+    datas = [t._data for t in tensors]
+    tracing = any(_is_tracer(d) for d in datas)
+
+    diffable = [
+        i for i, t in enumerate(tensors)
+        if jnp.issubdtype(t.dtype, jnp.inexact)
+    ]
+    needs_grad = (
+        not tracing
+        and is_grad_enabled()
+        and any(tensors[i].requires_grad or tensors[i].grad_fn is not None
+                for i in diffable)
+    )
+
+    if not needs_grad:
+        raw = fn(*datas)
+        return _wrap_outputs(raw, None)
+
+    if len(diffable) == len(datas):
+        out, vjp_fn = jax.vjp(fn, *datas)
+        inputs = list(tensors)
+    else:
+        # close over non-differentiable (integer/bool) operands
+        frozen = {i: d for i, d in enumerate(datas) if i not in diffable}
+
+        def fn_diff(*diff_args):
+            full = list(frozen.get(i) for i in range(len(datas)))
+            it = iter(diff_args)
+            for i in diffable:
+                full[i] = next(it)
+            return fn(*full)
+
+        out, vjp_fn = jax.vjp(fn_diff, *[datas[i] for i in diffable])
+        inputs = [tensors[i] for i in diffable]
+
+    node = Node(name, vjp_fn, inputs, num_outputs=num_outputs)
+    outs = out if isinstance(out, tuple) else (out,)
+    node.metadata["out_avals"] = [(o.shape, o.dtype) for o in outs]
+    for t in inputs:
+        node.save_version(t)
+    return _wrap_outputs(out, node)
+
+
+# ----------------------------------------------------------------------
+# module-level functional ops
+# ----------------------------------------------------------------------
+
+def add(a, b):
+    a = _coerce(a)
+    b = _coerce(b, like=a)
+    return _apply_op("add", jnp.add, a, b)
+
+
+def sub(a, b):
+    a = _coerce(a)
+    b = _coerce(b, like=a)
+    return _apply_op("sub", jnp.subtract, a, b)
+
+
+def mul(a, b):
+    a = _coerce(a)
+    b = _coerce(b, like=a)
+    return _apply_op("mul", jnp.multiply, a, b)
+
+
+def div(a, b):
+    a = _coerce(a)
+    b = _coerce(b, like=a)
+    return _apply_op("div", jnp.divide, a, b)
+
+
+def pow_(a, b):
+    a = _coerce(a)
+    b = _coerce(b, like=a)
+    return _apply_op("pow", jnp.power, a, b)
+
+
+def matmul(a, b):
+    a = _coerce(a)
+    b = _coerce(b, like=a)
+    return _apply_op("matmul", jnp.matmul, a, b)
+
+
+def maximum(a, b):
+    a, b = _coerce(a), _coerce(b)
+    return _apply_op("maximum", jnp.maximum, a, b)
+
+
+def minimum(a, b):
+    a, b = _coerce(a), _coerce(b)
+    return _apply_op("minimum", jnp.minimum, a, b)
+
+
+def where(cond, a, b):
+    cond = _coerce(cond)
+    a = _coerce(a)
+    b = _coerce(b, like=a)
+    return _apply_op("where", jnp.where, cond, a, b)
+
+
+def cat(tensors: Sequence[Tensor], dim: int = 0) -> Tensor:
+    tensors = [_coerce(t) for t in tensors]
+    return _apply_op("cat", lambda *xs: jnp.concatenate(xs, axis=dim),
+                     *tensors)
+
+
+concat = cat
+
+
+def stack(tensors: Sequence[Tensor], dim: int = 0) -> Tensor:
+    tensors = [_coerce(t) for t in tensors]
+    return _apply_op("stack", lambda *xs: jnp.stack(xs, axis=dim), *tensors)
+
+
+def split(t: Tensor, size: int, dim: int = 0):
+    n = t.shape[dim]
+    pieces = []
+    for start in range(0, n, size):
+        idx = [slice(None)] * t.ndim
+        idx[dim] = slice(start, min(start + size, n))
+        pieces.append(t[tuple(idx)])
+    return tuple(pieces)
+
+
+def einsum(subscripts: str, *tensors) -> Tensor:
+    tensors = [_coerce(t) for t in tensors]
+    return _apply_op("einsum",
+                     lambda *xs: jnp.einsum(subscripts, *xs), *tensors)
+
+
+def logsumexp(t: Tensor, dim=None, keepdim: bool = False) -> Tensor:
+    return _apply_op(
+        "logsumexp",
+        lambda x: jax.scipy.special.logsumexp(x, axis=dim, keepdims=keepdim),
+        _coerce(t))
+
+
+def exp(t):
+    return _coerce(t).exp()
+
+
+def log(t):
+    return _coerce(t).log()
+
+
+def sqrt(t):
+    return _coerce(t).sqrt()
+
+
+def tanh(t):
+    return _coerce(t).tanh()
+
+
+def sigmoid(t):
+    return _coerce(t).sigmoid()
+
+
+def relu(t):
+    return _coerce(t).relu()
+
+
+def softmax(t, dim: int = -1):
+    return _coerce(t).softmax(dim)
+
+
+def tril(t, k: int = 0):
+    return _apply_op("tril", lambda x: jnp.tril(x, k), _coerce(t))
+
+
+def triu(t, k: int = 0):
+    return _apply_op("triu", lambda x: jnp.triu(x, k), _coerce(t))
+
+
+def take_along_dim(t, indices, dim: int):
+    idx = _raw(indices)
+    return _apply_op("take_along_dim",
+                     lambda x: jnp.take_along_axis(x, idx, axis=dim),
+                     _coerce(t))
+
+
+def one_hot(t, num_classes: int, dtype=jnp.float32):
+    return Tensor(jax.nn.one_hot(_raw(t), num_classes, dtype=dtype))
+
+
+def _norm_shape(shape):
+    if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+        return tuple(shape[0])
+    return tuple(shape)
+
+
+# ----------------------------------------------------------------------
+# factories + RNG
+# ----------------------------------------------------------------------
+
+_rng_lock = threading.Lock()
+_np_rng = np.random.default_rng(0)
+
+
+def manual_seed(seed: int) -> None:
+    global _np_rng
+    with _rng_lock:
+        _np_rng = np.random.default_rng(seed)
+
+
+def _factory(arr, dtype=None, requires_grad: bool = False) -> Tensor:
+    data = jnp.asarray(arr)
+    if dtype is not None:
+        data = data.astype(dtype)
+    return Tensor(data, requires_grad=requires_grad)
+
+
+def tensor(data, dtype=None, requires_grad: bool = False) -> Tensor:
+    return _factory(data, dtype, requires_grad)
+
+
+def zeros(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    return Tensor(jnp.zeros(_norm_shape(shape), dtype), requires_grad)
+
+
+def ones(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    return Tensor(jnp.ones(_norm_shape(shape), dtype), requires_grad)
+
+
+def full(shape, fill_value, dtype=jnp.float32,
+         requires_grad: bool = False) -> Tensor:
+    return Tensor(jnp.full(shape, fill_value, dtype), requires_grad)
+
+
+def empty(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    return zeros(*shape, dtype=dtype, requires_grad=requires_grad)
+
+
+def zeros_like(t, dtype=None) -> Tensor:
+    return Tensor(jnp.zeros_like(_raw(t), dtype=dtype))
+
+
+def ones_like(t, dtype=None) -> Tensor:
+    return Tensor(jnp.ones_like(_raw(t), dtype=dtype))
+
+
+def arange(*args, dtype=None) -> Tensor:
+    return Tensor(jnp.arange(*args, dtype=dtype))
+
+
+def eye(n, m=None, dtype=jnp.float32) -> Tensor:
+    return Tensor(jnp.eye(n, m, dtype=dtype))
+
+
+def randn(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    with _rng_lock:
+        arr = _np_rng.standard_normal(_norm_shape(shape), dtype=np.float32)
+    return _factory(arr, dtype, requires_grad)
+
+
+def rand(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    with _rng_lock:
+        arr = _np_rng.random(_norm_shape(shape), dtype=np.float32)
+    return _factory(arr, dtype, requires_grad)
+
+
+def randint(low, high, shape, dtype=jnp.int32) -> Tensor:
+    with _rng_lock:
+        arr = _np_rng.integers(low, high, size=shape)
+    return _factory(arr, dtype)
+
+
+def normal(mean: float, std: float, shape, dtype=jnp.float32,
+           requires_grad: bool = False) -> Tensor:
+    with _rng_lock:
+        arr = _np_rng.normal(mean, std, size=shape).astype(np.float32)
+    return _factory(arr, dtype, requires_grad)
+
+
+def uniform(low: float, high: float, shape, dtype=jnp.float32,
+            requires_grad: bool = False) -> Tensor:
+    with _rng_lock:
+        arr = _np_rng.uniform(low, high, size=shape).astype(np.float32)
+    return _factory(arr, dtype, requires_grad)
+
+
+def from_numpy(arr: np.ndarray) -> Tensor:
+    """Zero-copy-intent interop (§4.2): on CPU backends jax aliases the
+    numpy buffer when dtype/layout allow."""
+    return Tensor(jnp.asarray(arr))
+
+
+# ----------------------------------------------------------------------
+# pytree registration: Tensors flow through jit/pjit/scan transparently
+# ----------------------------------------------------------------------
+
+def _tensor_flatten(t: Tensor):
+    return (t._data,), (t.requires_grad,)
+
+
+def _tensor_unflatten(aux, children):
+    (data,) = children
+    t = Tensor.__new__(Tensor)
+    t._data = data if isinstance(data, (jax.Array, jax.core.Tracer)) \
+        else jnp.asarray(data)
+    t.requires_grad = aux[0]
+    t.grad = None
+    t.grad_fn = None
+    t._output_index = 0
+    t._version = VersionCounter()
+    t._base = None
+    t._view_index = None
+    t._storage = None
+    return t
+
+
+jax.tree_util.register_pytree_node(Tensor, _tensor_flatten, _tensor_unflatten)

@@ -1,0 +1,308 @@
+"""repro.data — datasets and loaders (paper §4.2, §5.4).
+
+``Dataset`` is the two-method protocol of the paper (``__getitem__`` +
+``__len__``); ``DataLoader`` adds shuffling, batching, parallel workers and
+staged ("pinned") host memory.
+
+Hardware adaptation of §5.4: CPython's GIL pushed PyTorch to *processes* +
+shared-memory tensor transport.  Here the hot loop is ``numpy``/JAX C code
+that releases the GIL, so the default parallel worker is a *thread* pool
+writing into shared staging buffers drawn from the host caching allocator
+(the pinned-memory analogue; zero serialization, same property the paper
+achieves with torch.multiprocessing).  A true process +
+``multiprocessing.shared_memory`` channel is provided in
+``repro.data.shared_memory`` and benchmarked against pickle transport in
+``benchmarks/bench_dataloader.py``.
+
+Straggler mitigation (framework-level): per-batch worker deadline; on
+timeout the batch is refetched inline and the event is counted —
+at cluster scale the same hook drives requeue-on-slow-host.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import (Any, Callable, Generic, Iterable, Iterator, List,
+                    Optional, Sequence, TypeVar)
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import allocator as _alloc
+from ..core.tensor import Tensor
+
+T_co = TypeVar("T_co", covariant=True)
+
+
+class Dataset(Generic[T_co]):
+    """Map-style dataset: implement ``__getitem__`` and ``__len__``."""
+
+    def __getitem__(self, index: int) -> T_co:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class IterableDataset(Generic[T_co]):
+    def __iter__(self) -> Iterator[T_co]:
+        raise NotImplementedError
+
+
+class TensorDataset(Dataset):
+    def __init__(self, *tensors: Tensor):
+        assert all(t.shape[0] == tensors[0].shape[0] for t in tensors)
+        self.tensors = [np.asarray(t.data if isinstance(t, Tensor) else t)
+                        for t in tensors]
+
+    def __getitem__(self, index: int):
+        return tuple(t[index] for t in self.tensors)
+
+    def __len__(self) -> int:
+        return len(self.tensors[0])
+
+
+class SyntheticLMDataset(Dataset):
+    """Deterministic synthetic token stream (hash-based, no I/O) used by
+    the end-to-end training examples and benchmarks."""
+
+    def __init__(self, vocab_size: int, seq_len: int, size: int = 1 << 16,
+                 seed: int = 0):
+        self.vocab_size, self.seq_len, self.size = vocab_size, seq_len, size
+        self.seed = seed
+
+    def __getitem__(self, index: int):
+        rng = np.random.default_rng(self.seed * 1_000_003 + index)
+        tokens = rng.integers(0, self.vocab_size,
+                              size=self.seq_len + 1).astype(np.int32)
+        return tokens[:-1], tokens[1:]
+
+    def __len__(self) -> int:
+        return self.size
+
+
+# ----------------------------------------------------------------------
+# samplers
+# ----------------------------------------------------------------------
+
+class Sampler:
+    def __iter__(self) -> Iterator[int]:
+        raise NotImplementedError
+
+
+class SequentialSampler(Sampler):
+    def __init__(self, data_source):
+        self.n = len(data_source)
+
+    def __iter__(self):
+        return iter(range(self.n))
+
+    def __len__(self):
+        return self.n
+
+
+class RandomSampler(Sampler):
+    def __init__(self, data_source, seed: Optional[int] = None):
+        self.n = len(data_source)
+        self.seed = seed
+        self._epoch = 0
+
+    def set_epoch(self, epoch: int):
+        self._epoch = epoch
+
+    def __iter__(self):
+        rng = np.random.default_rng(
+            None if self.seed is None else self.seed + self._epoch)
+        return iter(rng.permutation(self.n).tolist())
+
+    def __len__(self):
+        return self.n
+
+
+class DistributedSampler(Sampler):
+    """Shards indices across data-parallel replicas (per-host loading for
+    the multi-pod mesh): each rank sees len(dataset)/num_replicas samples,
+    padded to equal length so collectives stay aligned."""
+
+    def __init__(self, dataset, num_replicas: int, rank: int,
+                 shuffle: bool = True, seed: int = 0,
+                 drop_last: bool = False):
+        if rank >= num_replicas:
+            raise ValueError(f"rank {rank} >= num_replicas {num_replicas}")
+        self.dataset_len = len(dataset)
+        self.num_replicas = num_replicas
+        self.rank = rank
+        self.shuffle = shuffle
+        self.seed = seed
+        self.drop_last = drop_last
+        self._epoch = 0
+        if drop_last:
+            self.num_samples = self.dataset_len // num_replicas
+        else:
+            self.num_samples = -(-self.dataset_len // num_replicas)
+        self.total_size = self.num_samples * num_replicas
+
+    def set_epoch(self, epoch: int) -> None:
+        self._epoch = epoch
+
+    def __iter__(self):
+        if self.shuffle:
+            rng = np.random.default_rng(self.seed + self._epoch)
+            indices = rng.permutation(self.dataset_len).tolist()
+        else:
+            indices = list(range(self.dataset_len))
+        if not self.drop_last:
+            pad = self.total_size - len(indices)
+            indices += indices[:pad]
+        else:
+            indices = indices[: self.total_size]
+        return iter(indices[self.rank: self.total_size: self.num_replicas])
+
+    def __len__(self):
+        return self.num_samples
+
+
+class BatchSampler(Sampler):
+    def __init__(self, sampler: Sampler, batch_size: int, drop_last: bool):
+        self.sampler, self.batch_size, self.drop_last = \
+            sampler, batch_size, drop_last
+
+    def __iter__(self):
+        batch: List[int] = []
+        for idx in self.sampler:
+            batch.append(idx)
+            if len(batch) == self.batch_size:
+                yield batch
+                batch = []
+        if batch and not self.drop_last:
+            yield batch
+
+    def __len__(self):
+        n = len(self.sampler)
+        return (n // self.batch_size if self.drop_last
+                else -(-n // self.batch_size))
+
+
+# ----------------------------------------------------------------------
+# collation + pinned staging
+# ----------------------------------------------------------------------
+
+def default_collate(items: Sequence[Any]):
+    first = items[0]
+    if isinstance(first, (tuple, list)):
+        return tuple(default_collate([it[i] for it in items])
+                     for i in range(len(first)))
+    if isinstance(first, dict):
+        return {k: default_collate([it[k] for it in items]) for k in first}
+    if isinstance(first, np.ndarray):
+        return np.stack(items)
+    if isinstance(first, Tensor):
+        return np.stack([np.asarray(t.data) for t in items])
+    return np.asarray(items)
+
+
+def _stage_and_transfer(batch, pin_memory: bool):
+    """numpy batch -> device Tensors, optionally via a staging block from
+    the host caching allocator (pinned-memory analogue)."""
+
+    def to_device(arr: np.ndarray) -> Tensor:
+        if pin_memory:
+            block = _alloc.host_allocator().allocate(
+                arr.nbytes, stream=_staging_stream_id)
+            if block.buffer is not None and arr.nbytes > 0:
+                staged = block.buffer[: arr.nbytes].view(arr.dtype)
+                np.copyto(staged, arr.reshape(-1).view(arr.dtype))
+                dev = jnp.asarray(staged.reshape(arr.shape))
+            else:
+                dev = jnp.asarray(arr)
+            _alloc.host_allocator().free(block)
+            return Tensor(dev)
+        return Tensor(jnp.asarray(arr))
+
+    if isinstance(batch, tuple):
+        return tuple(_stage_and_transfer(b, pin_memory) for b in batch)
+    if isinstance(batch, dict):
+        return {k: _stage_and_transfer(v, pin_memory)
+                for k, v in batch.items()}
+    return to_device(batch)
+
+
+_staging_stream_id = 1  # dedicated "copy stream" pool in the host allocator
+
+
+# ----------------------------------------------------------------------
+# DataLoader
+# ----------------------------------------------------------------------
+
+class DataLoader(Generic[T_co]):
+    def __init__(self, dataset: Dataset, batch_size: int = 1,
+                 shuffle: bool = False, sampler: Optional[Sampler] = None,
+                 batch_sampler: Optional[BatchSampler] = None,
+                 num_workers: int = 0,
+                 collate_fn: Optional[Callable] = None,
+                 pin_memory: bool = False, drop_last: bool = False,
+                 prefetch_factor: int = 2,
+                 worker_timeout_s: Optional[float] = None,
+                 seed: Optional[int] = None):
+        self.dataset = dataset
+        self.num_workers = num_workers
+        self.collate_fn = collate_fn or default_collate
+        self.pin_memory = pin_memory
+        self.prefetch_factor = max(1, prefetch_factor)
+        self.worker_timeout_s = worker_timeout_s
+        self.straggler_events = 0
+
+        if batch_sampler is not None:
+            self.batch_sampler = batch_sampler
+        else:
+            if sampler is None:
+                sampler = (RandomSampler(dataset, seed=seed) if shuffle
+                           else SequentialSampler(dataset))
+            self.sampler = sampler
+            self.batch_sampler = BatchSampler(sampler, batch_size, drop_last)
+
+    def __len__(self):
+        return len(self.batch_sampler)
+
+    def set_epoch(self, epoch: int):
+        s = getattr(self, "sampler", None)
+        if s is not None and hasattr(s, "set_epoch"):
+            s.set_epoch(epoch)
+
+    def _fetch(self, indices: List[int]):
+        return self.collate_fn([self.dataset[i] for i in indices])
+
+    def __iter__(self):
+        if self.num_workers == 0:
+            for indices in self.batch_sampler:
+                yield _stage_and_transfer(self._fetch(indices),
+                                          self.pin_memory)
+            return
+
+        # threaded prefetch pipeline with bounded depth
+        depth = self.num_workers * self.prefetch_factor
+        with ThreadPoolExecutor(max_workers=self.num_workers) as pool:
+            batches = iter(self.batch_sampler)
+            inflight: "queue.Queue" = queue.Queue()
+            submitted = 0
+            for indices in batches:
+                inflight.put((pool.submit(self._fetch, indices), indices))
+                submitted += 1
+                if submitted >= depth:
+                    break
+            while not inflight.empty():
+                fut, indices = inflight.get()
+                # straggler mitigation: deadline + inline refetch
+                try:
+                    batch = fut.result(timeout=self.worker_timeout_s)
+                except TimeoutError:
+                    self.straggler_events += 1
+                    fut.cancel()
+                    batch = self._fetch(indices)
+                nxt = next(batches, None)
+                if nxt is not None:
+                    inflight.put((pool.submit(self._fetch, nxt), nxt))
+                yield _stage_and_transfer(batch, self.pin_memory)

@@ -1,0 +1,124 @@
+"""Activation sharding constraints (logical annotations inside the model).
+
+GSPMD propagates shardings from params/inputs, but for LM-scale tensors a
+few explicit anchors prevent catastrophic choices (e.g. all-gathering the
+(B, S, vocab) logits).  The model code calls ``constrain(x, kind)``; the
+step builders activate a scope describing the mesh.  Outside any scope
+(eager mode, smoke tests, single device) it is a no-op.
+
+Kinds:
+  btd     — (B, S, D) residual stream           → P(batch, None, None)
+  btf     — (B, S, F) ffn hidden                → P(batch, None, model)
+  bhsd    — (B, H, S, Dh) attention tensors     → heads over model when
+            divisible, else sequence over model (context parallelism)
+  logits  — (B, S, V) vocab-sharded             → P(batch, None, model)
+  ecd     — (E, C, D) MoE dispatched tokens     → P(model, None, None)
+            when E divides, else P(None, None, None)
+  ecf     — (E, C, F) MoE expert hidden         → expert or hidden dim
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_tls = threading.local()
+
+
+class _Scope:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.batch = tuple(a for a in ("pod", "data")
+                           if a in mesh.axis_names)
+        self.model = "model" if "model" in mesh.axis_names else None
+        self.model_size = mesh.shape.get("model", 1)
+        self.data_size = 1
+        for a in self.batch:
+            self.data_size *= mesh.shape[a]
+
+
+@contextmanager
+def scope(mesh: Optional[Mesh]):
+    prev = getattr(_tls, "scope", None)
+    _tls.scope = _Scope(mesh) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _tls.scope = prev
+
+
+def _get() -> Optional[_Scope]:
+    return getattr(_tls, "scope", None)
+
+
+def _apply(x, spec: P):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def constrain(x, kind: str, *, heads: Optional[int] = None,
+              experts: Optional[int] = None):
+    s = _get()
+    if s is None or s.model is None:
+        return x
+    b_ok = x.shape[0] % max(s.data_size, 1) == 0 and x.shape[0] > 1
+    batch = s.batch if b_ok else None
+
+    if kind == "btd":
+        # REPRO_SEQ_SHARD=1: shard the residual stream's sequence dim
+        # over 'model' (Megatron sequence-parallel / context-parallel):
+        # all dense matmuls run on S/TP slices, attention gathers K/V.
+        if (os.environ.get("REPRO_SEQ_SHARD") == "1"
+                and x.shape[1] % s.model_size == 0):
+            return _apply(x, P(batch, s.model, None))
+        return _apply(x, P(batch, None, None))
+    if kind == "btf":
+        if (os.environ.get("REPRO_SEQ_SHARD") == "1"
+                and x.shape[1] % s.model_size == 0):
+            return _apply(x, P(batch, s.model, None))
+        f_ok = x.shape[-1] % s.model_size == 0
+        return _apply(x, P(batch, None, s.model if f_ok else None))
+    if kind == "logits":
+        v_ok = x.shape[-1] % s.model_size == 0
+        return _apply(x, P(batch, None, s.model if v_ok else None))
+    if kind == "bhsd":
+        h = heads if heads is not None else x.shape[1]
+        if h % s.model_size == 0:
+            return _apply(x, P(batch, s.model, None, None))
+        # heads don't divide TP: strategy knob (perf hillclimb)
+        #   context   — shard the sequence dim over model (ring-like)
+        #   replicate — keep attention replicated across model ranks
+        strategy = os.environ.get("REPRO_ATTN_FALLBACK", "context")
+        if strategy == "context" and x.shape[2] % s.model_size == 0:
+            return _apply(x, P(batch, None, s.model, None))
+        if strategy == "replicate":
+            return _apply(x, P(batch, None, None, None))
+        return x
+    if kind in ("ecd", "ecf"):
+        e = experts if experts is not None else x.shape[0]
+        if e % s.model_size == 0:
+            return _apply(x, P(s.model, None, None))
+        if kind == "ecf" and x.shape[-1] % s.model_size == 0:
+            return _apply(x, P(None, None, s.model))
+        return x
+    if kind in ("gecd", "gecf"):
+        e = experts if experts is not None else x.shape[1]
+        g_ok = x.shape[0] % max(s.data_size, 1) == 0
+        g_ax = s.batch if g_ok else None
+        if e % s.model_size == 0:
+            return _apply(x, P(g_ax, s.model, None, None))
+        if kind == "gecf" and x.shape[-1] % s.model_size == 0:
+            return _apply(x, P(g_ax, None, None, s.model))
+        return _apply(x, P(g_ax, None, None, None))
+    return x
+
+
+def active() -> bool:
+    return _get() is not None

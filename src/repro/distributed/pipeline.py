@@ -1,0 +1,96 @@
+"""Pipeline parallelism over the 'pod' axis (GPipe-style, shard_map +
+collective_permute).
+
+The paper's §7 roadmap — "a Pythonic library for model parallelism" — maps
+onto the multi-pod mesh as an OPTIONAL alternative role for the pod axis:
+instead of pure DP across pods, stages of the layer stack live on
+different pods and microbatches stream through with ``ppermute`` moving
+activations stage→stage over DCN.
+
+Schedule: GPipe fill-drain over M microbatches and S stages
+(bubble fraction (S-1)/(M+S-1)).  Stage-local compute is whatever block
+function the model provides; weights for stage i are sharded to pod i by
+construction (leading stage axis over 'pod').
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x: jnp.ndarray, *,
+                   mesh: Mesh, n_microbatches: int,
+                   axis: str = "pod") -> jnp.ndarray:
+    """Run ``x`` through S pipeline stages.
+
+    stage_fn(params_i, x) -> x        (same shape in/out)
+    stage_params: pytree with leading stage axis S == mesh.shape[axis]
+    x: (B, ...) global batch; B % n_microbatches == 0.
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_microbatches == 0, (b, n_microbatches)
+    mb = b // n_microbatches
+
+    p_specs = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(p_specs, P()), out_specs=P(),
+        check_rep=False)
+    def run(params, xs):
+        stage = jax.lax.axis_index(axis)
+        params = jax.tree_util.tree_map(lambda a: a[0], params)
+        n_ticks = n_microbatches + n_stages - 1
+        perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        micro = xs.reshape((n_microbatches, mb) + xs.shape[1:])
+        out = jnp.zeros_like(micro)
+        carry = jnp.zeros((mb,) + xs.shape[1:], xs.dtype)
+
+        def tick(t, state):
+            carry, out = state
+            # stage 0 ingests microbatch t (when valid)
+            mb_idx = jnp.clip(t, 0, n_microbatches - 1)
+            inject = micro[mb_idx]
+            inp = jnp.where(stage == 0, inject, carry)
+            y = stage_fn(params, inp)
+            # last stage emits microbatch t-(S-1)
+            emit_idx = jnp.clip(t - (n_stages - 1), 0, n_microbatches - 1)
+            valid_emit = jnp.logical_and(stage == n_stages - 1,
+                                         t >= n_stages - 1)
+            out = jax.lax.cond(
+                valid_emit,
+                lambda o: o.at[emit_idx].set(y),
+                lambda o: o,
+                out)
+            # activations move stage -> stage+1
+            carry = jax.lax.ppermute(y, axis, perm)
+            return carry, out
+
+        carry, out = jax.lax.fori_loop(0, n_ticks, tick, (carry, out))
+        # only the last stage holds real outputs; psum of the masked
+        # buffer broadcasts it so the replicated out_spec is truthful
+        out = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out)),
+            axis) if n_stages > 1 else out
+        return out.reshape(xs.shape)
+
+    return run(stage_params, x)
+
+
+def stages_from_groups(params_groups, n_stages: int):
+    """Re-slice scan-stacked group params (leading n_groups axis) into
+    n_stages contiguous chunks with a leading stage axis."""
+    def slice_leaf(a):
+        g = a.shape[0]
+        assert g % n_stages == 0, (g, n_stages)
+        return a.reshape((n_stages, g // n_stages) + a.shape[1:])
+
+    return jax.tree_util.tree_map(slice_leaf, params_groups)

@@ -1,0 +1,11 @@
+"""repro.kernels — Pallas TPU kernels for the architecture hot spots.
+
+  flash_attention  — tiled online-softmax attention (GQA, causal, window)
+  decode_attention — flash-decode over a KV cache (scalar-prefetch lengths)
+  rwkv6_scan       — WKV6 recurrence with VMEM-resident (D,D) state
+  mamba_scan       — selective SSM scan, channel-tiled, VMEM state
+
+Each has a pure-jnp oracle in ``ref.py`` and a jit-ready wrapper in
+``ops.py`` (auto-interpret on CPU, custom_vjp backward via the oracle).
+"""
+from . import ops, ref  # noqa: F401

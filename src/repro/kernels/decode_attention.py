@@ -1,0 +1,121 @@
+"""Single-token decode attention kernel (Pallas/TPU).
+
+One new query token per sequence attends over a (B, Hkv, Smax, D) KV cache
+filled to ``cache_len[b]`` positions.  TPU adaptation of flash-decoding:
+
+  * grid = (B, Hkv, Smax/block_k) with the KV sweep as the sequential
+    dimension; online-softmax stats live in VMEM scratch,
+  * all G = Hq/Hkv query heads of a KV group are processed together as a
+    (G, D) tile — the score matmul is (G, D)x(D, block_k), keeping the MXU
+    busy even at batch 1,
+  * ``cache_len`` is a scalar-prefetch operand (SMEM): block index maps and
+    masks read it before the kernel body runs, so out-of-range KV tiles
+    are masked with zero MXU waste.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, window: Optional[int], block_k: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[b]
+    k_start = ki * block_k
+    run = k_start < cache_len
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k > cache_len - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0]                               # (G, D)
+        k = k_ref[0, 0]                               # (bk, D)
+        v = v_ref[0, 0]
+        scores = pl.dot(q, k, trans_b=True).astype(jnp.float32) * scale
+
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 1)
+        mask = k_pos < cache_len
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos >= cache_len - window)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        p = jnp.exp(scores - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = jnp.broadcast_to(
+            alpha * l_scr[:, :1] + jnp.sum(p, axis=-1, keepdims=True),
+            l_scr.shape)
+        acc_scr[...] = acc_scr[...] * alpha + pl.dot(
+            p.astype(v.dtype), v).astype(jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, cache_len: jnp.ndarray, *,
+                         scale: float, window: Optional[int] = None,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hkv, G, D) — query heads grouped by their KV head;
+    k_cache/v_cache: (B, Hkv, Smax, D); cache_len: (B,) int32.
+    Returns (B, Hkv, G, D)."""
+    b, hkv, g, d = q.shape
+    smax = k_cache.shape[2]
+    block_k = min(block_k, smax)
+    nk = pl.cdiv(smax, block_k)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               block_k=block_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, ki, lens: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, ki, lens: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b, h, ki, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+        name="decode_attention_fwd",
+    )(jnp.asarray(cache_len, jnp.int32), q, k_cache, v_cache)

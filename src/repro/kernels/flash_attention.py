@@ -1,0 +1,143 @@
+"""Flash attention forward kernel (Pallas/TPU).
+
+Tiled online-softmax attention à la FlashAttention-2, adapted to the TPU
+memory hierarchy: Q tiles live in VMEM for the duration of a KV sweep, the
+(block_q, block_k) score tile is produced on the MXU via ``pl.dot`` with
+f32 accumulation, and softmax statistics are carried in VMEM scratch across
+the sequential KV grid dimension.
+
+Supports: causal masking, sliding-window (local) masking, GQA (the KV
+block index map folds the query-head → kv-head mapping), arbitrary
+Sq != Skv offsets.  Block-level early-out: fully-masked KV tiles write
+nothing and skip the MXU work under ``pl.when``.
+
+Layout notes (TPU): head_dim is padded to a lane multiple (128) by the
+wrapper in ``ops.py``; block_q/block_k default to 128/128 which keeps the
+working set (q + k + v + scores + acc ≈ 4·128·128·4B + 128·head_dim·12B)
+well under the ~16MB VMEM budget up to head_dim=256.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, kv_len: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of this tile
+    q_start = qi * block_q + q_offset      # first query's absolute position
+    k_start = ki * block_k
+
+    # tile-level skip tests (structural masking)
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        # newest key this tile could need: q_pos >= k_pos > q_pos - window
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]                                   # (bk, d)
+        v = v_ref[0]
+        scores = pl.dot(q, k, trans_b=True,
+                        precision=jax.lax.Precision.DEFAULT).astype(
+            jnp.float32) * scale                       # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_scr[:, :1]                          # (bq, 1)
+        m_cur = jnp.max(scores, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new)                    # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_new = alpha * l_scr[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+
+        acc_scr[...] = acc_scr[...] * alpha + pl.dot(
+            p.astype(v.dtype), v).astype(jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool, scale: float,
+                        window: Optional[int],
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (BHq, Sq, D), k/v: (BHkv, Skv, D), with BHq = B*Hq grouped so
+    that query head h maps to kv head h // (Hq // Hkv) (done via the
+    index map using ``group`` below).  Call through ops.flash_attention.
+    """
+    bhq, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    group = bhq // bhkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_k)
+    q_offset = skv - sq  # queries are the LAST sq positions (prefill)
+
+    grid = (bhq, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_len=skv, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_attention_fwd",
+    )(q, k, v)

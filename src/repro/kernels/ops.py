@@ -1,0 +1,187 @@
+"""Public, jit-ready wrappers around the Pallas kernels.
+
+Each op:
+  * normalizes layouts (GQA head grouping, lane-width padding),
+  * runs the Pallas kernel (interpret mode automatically on CPU so the
+    same code validates here and runs native on TPU),
+  * exposes a ``jax.custom_vjp``: forward = kernel, backward = JAX AD
+    through the ``ref.py`` oracle with recomputation (flash-style
+    recompute; a fused backward kernel is a further optimization noted in
+    DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_fwd
+from .flash_attention import flash_attention_fwd
+from .mamba import mamba_scan_fwd
+from .rwkv6 import rwkv6_scan_fwd
+
+LANE = 128
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_last(x: jnp.ndarray, to: int) -> jnp.ndarray:
+    d = x.shape[-1]
+    if d % to == 0:
+        return x
+    pad = to - d % to
+    cfg = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, cfg)
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: Optional[float] = None,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D).  GQA-aware."""
+    return _flash_fwd_impl(q, k, v, causal, scale, window)
+
+
+def _flash_fwd_impl(q, k, v, causal, scale, window):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    eff_scale = scale if scale is not None else d ** -0.5
+
+    qp = _pad_last(q, LANE)
+    kp = _pad_last(k, LANE)
+    vp = _pad_last(v, LANE)
+    dp = qp.shape[-1]
+
+    out = flash_attention_fwd(
+        qp.reshape(b * hq, sq, dp),
+        kp.reshape(b * hkv, skv, dp),
+        vp.reshape(b * hkv, skv, dp),
+        causal=causal, scale=eff_scale, window=window,
+        interpret=_interpret())
+    return out.reshape(b, hq, sq, dp)[..., :d]
+
+
+def _flash_fwd(q, k, v, causal, scale, window):
+    return _flash_fwd_impl(q, k, v, causal, scale, window), (q, k, v)
+
+
+def _flash_bwd(causal, scale, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention(
+            q_, k_, v_, causal=causal, scale=scale, window=window),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ----------------------------------------------------------------------
+# decode attention
+# ----------------------------------------------------------------------
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, Hq, 1, D) vs cache (B, Hkv, Smax, D), cache_len scalar or
+    (B,).  Inference-only (no vjp)."""
+    b, hq, one, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    g = hq // hkv
+    eff_scale = scale if scale is not None else d ** -0.5
+
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,))
+    qg = _pad_last(q.reshape(b, hkv, g, d), LANE)
+    kp = _pad_last(k_cache, LANE)
+    vp = _pad_last(v_cache, LANE)
+
+    out = decode_attention_fwd(qg, kp, vp, lens, scale=eff_scale,
+                               window=window, interpret=_interpret())
+    return out[..., :d].reshape(b, hq, 1, d)
+
+
+# ----------------------------------------------------------------------
+# rwkv6
+# ----------------------------------------------------------------------
+
+@jax.custom_vjp
+def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               w: jnp.ndarray, u: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r/k/v/w: (B, H, S, D); u: (H, D) bonus.
+    Returns (out (B,H,S,D), state (B,H,D,D))."""
+    return _rwkv6_impl(r, k, v, w, u)
+
+
+def _rwkv6_impl(r, k, v, w, u):
+    b, h, s, d = r.shape
+    dp = ((d + LANE - 1) // LANE) * LANE
+
+    def prep(x):
+        return _pad_last(x, LANE).reshape(b * h, s, dp)
+
+    rp, kp, vp = prep(r), prep(k), prep(v)
+    # pad decay with ONES so padded state stays zero but stable
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, dp - d)),
+                 constant_values=1.0).reshape(b * h, s, dp)
+    up = jnp.broadcast_to(_pad_last(u, LANE)[None], (b, h, dp)) \
+        .reshape(b * h, dp)
+
+    out, state = rwkv6_scan_fwd(rp, kp, vp, wp, up,
+                                interpret=_interpret())
+    out = out.reshape(b, h, s, dp)[..., :d]
+    state = state.reshape(b, h, dp, dp)[..., :d, :d]
+    return out, state
+
+
+def _rwkv6_fwd(r, k, v, w, u):
+    return _rwkv6_impl(r, k, v, w, u), (r, k, v, w, u)
+
+
+def _rwkv6_bwd(res, g):
+    r, k, v, w, u = res
+    _, vjp = jax.vjp(lambda *a: ref.rwkv6_scan(*a), r, k, v, w, u)
+    return vjp(g)
+
+
+rwkv6_scan.defvjp(_rwkv6_fwd, _rwkv6_bwd)
+
+
+# ----------------------------------------------------------------------
+# mamba selective scan
+# ----------------------------------------------------------------------
+
+@jax.custom_vjp
+def mamba_scan(x: jnp.ndarray, dt: jnp.ndarray, B: jnp.ndarray,
+               C: jnp.ndarray, A: jnp.ndarray,
+               D: jnp.ndarray) -> jnp.ndarray:
+    """x/dt: (B, S, Di); B/C: (B, S, N); A: (Di, N); D: (Di,)."""
+    return mamba_scan_fwd(x, dt, B, C, A, D, interpret=_interpret())
+
+
+def _mamba_fwd(x, dt, B, C, A, D):
+    return mamba_scan_fwd(x, dt, B, C, A, D, interpret=_interpret()), \
+        (x, dt, B, C, A, D)
+
+
+def _mamba_bwd(res, g):
+    x, dt, B, C, A, D = res
+    _, vjp = jax.vjp(lambda *a: ref.mamba_scan(*a), x, dt, B, C, A, D)
+    return vjp(g)
+
+
+mamba_scan.defvjp(_mamba_fwd, _mamba_bwd)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These re-export / wrap the reference math that the model layer uses, with
+the exact argument conventions of the kernels in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.attention import decode_attention as _decode_ref
+from ..models.attention import sdpa_ref as _sdpa_ref
+from ..models.layers import _ssm_scan_ref, _wkv6_ref
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: Optional[float] = None,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) — GQA broadcast inside."""
+    return _sdpa_ref(q, k, v, mask=None, is_causal=causal, scale=scale,
+                     window=window)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    return _decode_ref(q, k_cache, v_cache, cache_len, scale=scale,
+                       window=window, backend="ref")
+
+
+def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               w: jnp.ndarray, u: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r/k/v/w: (B, H, S, D); u: (H, D).  Returns (out, final_state)."""
+    return _wkv6_ref(r, k, v, w, u)
+
+
+def mamba_scan(x: jnp.ndarray, dt: jnp.ndarray, B: jnp.ndarray,
+               C: jnp.ndarray, A: jnp.ndarray,
+               D: jnp.ndarray) -> jnp.ndarray:
+    """x/dt: (B, S, Di); B/C: (B, S, N); A: (Di, N); D: (Di,)."""
+    return _ssm_scan_ref(x, dt, B, C, A, D)

@@ -1,0 +1,98 @@
+"""RWKV-6 WKV recurrence kernel (Pallas/TPU).
+
+The WKV6 state is a per-head (D, D) matrix updated per token with a
+data-dependent diagonal decay:
+
+    out_t = r_t · (S + diag(u) · k_tᵀ v_t)
+    S    ← diag(w_t) · S + k_tᵀ v_t
+
+TPU adaptation: the state matrix lives in VMEM scratch for the whole
+sequence sweep (grid = (B·H, S/chunk) with the chunk dim sequential), so
+HBM traffic is exactly the r/k/v/w inputs + outputs — the lax.scan
+reference round-trips the state through HBM each step and saves every
+step's state for backward.  Within a chunk the recurrence is a
+``fori_loop`` of rank-1 updates on the VMEM-resident state; (D=64 heads
+are padded to the 128-lane width by the wrapper).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_out_ref,
+                  s_scr, *, chunk: int, seq_len: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0]                                       # (D,)
+
+    def step(t, _):
+        # tail guard: positions past seq_len (partial final chunk) must
+        # not touch the carried state
+        valid = ci * chunk + t < seq_len
+        r_t = r_ref[0, t].astype(jnp.float32)          # (D,)
+        k_t = k_ref[0, t].astype(jnp.float32)
+        v_t = v_ref[0, t].astype(jnp.float32)
+        w_t = w_ref[0, t].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]               # (Dk, Dv) rank-1
+        s = s_scr[...]
+        out = jnp.sum((s + u.astype(jnp.float32)[:, None] * kv)
+                      * r_t[:, None], axis=0)          # (Dv,)
+        o_ref[0, t] = out.astype(o_ref.dtype)
+        s_scr[...] = jnp.where(valid, w_t[:, None] * s + kv, s)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        state_out_ref[0] = s_scr[...]
+
+
+def rwkv6_scan_fwd(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   w: jnp.ndarray, u: jnp.ndarray, *,
+                   chunk: int = DEFAULT_CHUNK,
+                   interpret: bool = False):
+    """r/k/v/w: (BH, S, D) (heads flattened into batch); u: (BH, D)
+    (broadcast per head by the wrapper).  Returns (out (BH, S, D),
+    state (BH, D, D) f32)."""
+    bh, s, d = r.shape
+    chunk = min(chunk, s)
+    nc = pl.cdiv(s, chunk)
+
+    kernel = functools.partial(_rwkv6_kernel, chunk=chunk, seq_len=s)
+    out, state = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, d), lambda b, ci: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, d, d), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), r.dtype),
+            jax.ShapeDtypeStruct((bh, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+        name="rwkv6_scan_fwd",
+    )(r, k, v, w, u)
+    return out, state

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_BASE_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes, prove memory/sharding coherence, and dump roofline
+inputs.
+
+MUST be the process entry point (jax locks device count at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out experiments/dryrun
+
+Per cell it prints/records:
+  * compiled.memory_analysis()  — per-device bytes (fits/doesn't fit)
+  * compiled.cost_analysis()    — FLOPs / bytes for §Roofline
+  * collective schedule summary — parsed from the compiled HLO
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from dataclasses import replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SkipSpec, get_config, get_shapes,
+                           input_specs)
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models import lm as LM
+
+
+def _mem_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+        out = {
+            "bytes": float(getattr(ma, "temp_size_in_bytes", 0)
+                           + getattr(ma, "argument_size_in_bytes", 0)
+                           + getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+            "argument_bytes": float(getattr(ma, "argument_size_in_bytes",
+                                            0)),
+            "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+            "alias_bytes": float(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+ACCUM_STEPS = {
+    # giant models: microbatch so per-device activations fit 16GB HBM
+    "arctic-480b": 8,
+    "jamba-1.5-large-398b": 8,
+    "yi-34b": 2,
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: Optional[str] = None,
+             optimizer: Optional[str] = None,
+             accum_steps: Optional[int] = None,
+             skip_cost: bool = False) -> Dict:
+    cfg = get_config(arch)
+    # dry-run lowers the pure-jnp reference path (Pallas kernels target
+    # real TPUs; interpret-mode kernels don't belong in an HLO dry-run)
+    cfg = replace(cfg, attn_backend="ref")
+    spec = get_shapes(arch)[shape_name]
+    if isinstance(spec, SkipSpec):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": spec.reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = len(mesh.devices.reshape(-1))
+    if optimizer is None:
+        # giant MoEs train with factored second moments to fit HBM
+        optimizer = "adafactor" if arch in ("arctic-480b",
+                                            "jamba-1.5-large-398b") \
+            else "adamw"
+
+    def lower_cell(cfg_l, accum):
+        if spec.kind == "train":
+            batch_abs = input_specs(cfg_l, spec)
+            step, _s, state_abs, _ = make_train_step(
+                cfg_l, mesh, optimizer=optimizer, batch_abs=batch_abs,
+                accum_steps=accum)
+            return step.lower(state_abs, batch_abs)
+        if spec.kind == "prefill":
+            step, _p, params_abs = make_prefill_step(cfg_l, mesh)
+            return step.lower(params_abs, input_specs(cfg_l, spec))
+        step, _p, params_abs, _c, cache_abs = make_serve_step(
+            cfg_l, mesh, batch=spec.global_batch, max_seq=spec.seq_len)
+        io = input_specs(cfg_l, spec)
+        return step.lower(params_abs, cache_abs, io["tokens"], io["pos"])
+
+    if accum_steps is None:
+        accum_steps = ACCUM_STEPS.get(arch, 1) if spec.kind == "train" \
+            else 1
+
+    t0 = time.time()
+    with mesh:
+        # pass 1 — production form (scan-over-groups, grad accumulation):
+        # proves sharding/memory coherence; memory_analysis is taken here.
+        lowered = lower_cell(cfg, accum_steps)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = _mem_summary(compiled)
+
+        # pass 2 — cost form (groups unrolled, accum=1): XLA counts a
+        # while-loop body ONCE in cost_analysis, so the exact FLOPs /
+        # bytes / collective schedule come from the unrolled lowering.
+        # For deep pattern-len-1 stacks (n_groups > 12, no tail) we use
+        # an AFFINE TWO-POINT method instead of unrolling all L layers:
+        # lower 1-group and 2-group unrolled models; the per-group cost
+        # is their difference (cost is affine in group count), so
+        # total = c1 + (n_groups-1)·(c2-c1).  Validated against the full
+        # unroll on gemma-2b (<1% error, see EXPERIMENTS §Roofline).
+        t0 = time.time()
+        cost = {}
+        hlo = ""
+        extrapolated = False
+        if skip_cost:
+            cost = dict(compiled.cost_analysis() or {})
+            hlo = compiled.as_text()
+        elif cfg.n_groups > 12 and not cfg.tail:
+            extrapolated = True
+            plen = len(cfg.pattern)
+            metrics = []
+            for g in (1, 2):
+                c = lower_cell(replace(cfg, n_layers=g * plen,
+                                       unroll_groups=True), 1).compile()
+                ca = dict(c.cost_analysis() or {})
+                coll = RL.collective_bytes(c.as_text())
+                coll.pop("_counts", None)
+                metrics.append((float(ca.get("flops", 0.0)),
+                                float(ca.get("bytes accessed", 0.0)),
+                                {k: float(v) for k, v in coll.items()}))
+            n = cfg.n_groups
+            f1, b1, co1 = metrics[0]
+            f2, b2, co2 = metrics[1]
+            cost = {"flops": f1 + (n - 1) * (f2 - f1),
+                    "bytes accessed": b1 + (n - 1) * (b2 - b1)}
+            # synthesize an HLO-free collective total via the same affine
+            # rule; stash for RL.analyze through a fake hlo-less path
+            coll_total = {k: co1.get(k, 0) + (n - 1)
+                          * (co2.get(k, 0) - co1.get(k, 0))
+                          for k in co1}
+            hlo = None
+            _coll_override = coll_total
+        else:
+            cost_cfg = replace(cfg, unroll_groups=True)
+            compiled_cost = lower_cell(cost_cfg, 1).compile()
+            cost = dict(compiled_cost.cost_analysis() or {})
+            hlo = compiled_cost.as_text()
+        t_cost = time.time() - t0
+    # train cost pass ran accum=1 over the full batch: same total tokens
+    if hlo is None:
+        rl = RL.analyze(arch, shape_name, mesh_name, n_dev, cfg, spec,
+                        spec.kind, cost, "", mem)
+        rl.collective_breakdown = {k: int(v)
+                                   for k, v in _coll_override.items()}
+        coll_total_bytes = float(sum(_coll_override.values()))
+        rl.collective_bytes_per_device = coll_total_bytes
+        rl.collective_s = coll_total_bytes / RL.ICI_BW
+        terms = {"compute": rl.compute_s, "memory": rl.memory_s,
+                 "collective": rl.collective_s}
+        rl.dominant = max(terms, key=terms.get)
+        rl.note = "cost via affine 2-point extrapolation over groups"
+    else:
+        rl = RL.analyze(arch, shape_name, mesh_name, n_dev, cfg, spec,
+                        spec.kind, cost, hlo, mem)
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "n_devices": n_dev, "optimizer": optimizer,
+        "accum_steps": accum_steps,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_pass_s": round(t_cost, 2),
+        "memory": mem,
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "roofline": rl.as_dict(),
+    }
+    print(f"[{arch} × {shape_name} × {mesh_name}] "
+          f"dev={n_dev} bytes/dev={mem.get('bytes', 0)/1e9:.2f}GB "
+          f"flops/dev={rl.flops_per_device/1e9:.1f}G "
+          f"coll/dev={rl.collective_bytes_per_device/1e6:.1f}MB "
+          f"dominant={rl.dominant} "
+          f"(compile {t_compile:.1f}s)")
+    print("  memory_analysis:", json.dumps(mem))
+    print("  cost_analysis: flops=%.3e bytes=%.3e" % (
+        rl.flops_per_device, rl.bytes_per_device))
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}.json".replace("/", "_")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="skip the unrolled cost pass (multi-pod validity "
+                         "runs)")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape_name in get_shapes(arch):
+                for m in meshes:
+                    cells.append((arch, shape_name, m))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required without --all")
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = []
+    for arch, shape_name, m in cells:
+        try:
+            run_cell(arch, shape_name, m, out_dir=args.out,
+                     optimizer=args.optimizer,
+                     skip_cost=(args.skip_cost or m == "multi"))
+        except Exception as e:
+            failures.append((arch, shape_name, m, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED {len(failures)} cells:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print(f"\nall {len(cells)} cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

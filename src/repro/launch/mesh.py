@@ -1,0 +1,55 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any JAX
+import and only then calls ``make_production_mesh``.
+
+Mesh shapes:
+  single pod:  (data=16, model=16)          — 256 chips (one v5e pod)
+  multi-pod:   (pod=2, data=16, model=16)   — 512 chips across DCN
+
+Axis roles:
+  pod   — pure data parallelism across pods (DCN-crossing collectives are
+          gradient all-reduces only; optionally the pipeline axis)
+  data  — data parallel + FSDP (weights shard their contracting dim here)
+  model — tensor/expert/context parallel within a pod (ICI)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]
+              ) -> jax.sharding.Mesh:
+    """Arbitrary mesh for tests/examples (e.g. (1,1) on one CPU)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist, as a (data, model) mesh with model=1."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axis_names(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Axes over which the batch is sharded (pod folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mesh_info(mesh: jax.sharding.Mesh) -> dict:
+    return {
+        "axis_names": mesh.axis_names,
+        "shape": dict(mesh.shape),
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+    }

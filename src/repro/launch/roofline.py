@@ -1,0 +1,164 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Per (arch × shape × mesh) we derive, for TPU v5e targets:
+
+  compute term    = FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = bytes_per_device / HBM_bw_per_chip
+  collective term = collective_bytes_per_device / ICI_bw_per_chip
+
+``compiled.cost_analysis()`` reports the per-device (SPMD module) FLOPs
+and bytes.  Collective bytes are not in cost_analysis: we parse the
+compiled HLO and sum the result-buffer sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+
+MODEL_FLOPS uses 6·N·D (dense) or 6·N_active·D (MoE) per trained token,
+3× less for forward-only (prefill/decode counts 2·N·D per token).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~3 links usable: use 1-link
+                             # figure per the spec: ~50 GB/s/link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. "bf16[2,1024,128]{2,1,0} all-gather(" possibly inside tuples
+_SHAPE_RE = re.compile(
+    r"(\w+)\[([\d,]*)\][^=]*?=\s*\(?[\w\s,\[\]{}()]*?(" +
+    "|".join(_COLLECTIVES) + r")\(")
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?\S+\s*=\s*(.+?)\s+(" + "|".join(_COLLECTIVES) +
+    r")(?:-start|-done)?\(", re.M)
+_ONE_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    if not dims:
+        return nbytes
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-buffer bytes per collective kind from HLO text."""
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_LINE_RE.finditer(hlo_text):
+        result_type, kind = m.group(1), m.group(2)
+        if kind.endswith("-done"):
+            continue
+        size = sum(_shape_bytes(dt, dims)
+                   for dt, dims in _ONE_SHAPE.findall(result_type))
+        totals[kind] += size
+        counts[kind] += 1
+    totals["_counts"] = counts  # type: ignore[assignment]
+    return totals
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs × devices)
+    bytes_per_device_peak: Optional[float] = None   # from memory_analysis
+    note: str = ""
+
+    def as_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def model_flops(cfg, spec, kind: str) -> float:
+    """6·N_active·D for train, 2·N_active·D per forward token."""
+    import jax
+    from ..models.lm import abstract_params
+
+    # parameter count excluding embeddings (standard convention keeps
+    # embed out of the 6ND matmul estimate; logits matmul added back)
+    ap = abstract_params(cfg)
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(ap))
+    embed = cfg.vocab_size * cfg.d_model
+    n_embed_mats = sum(
+        1 for k in ("embed",) ) + (0 if cfg.tie_embeddings else 1)
+    body = total - embed * (1 if cfg.tie_embeddings else 2)
+
+    # MoE: only top_k of n_experts expert FFNs run per token
+    if cfg.n_experts:
+        moe_layers = sum(1 for s in cfg.pattern if s.ffn == "moe") \
+            * cfg.n_groups + sum(1 for s in cfg.tail if s.ffn == "moe")
+        per_layer_expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts
+        inactive = per_layer_expert * (1 - cfg.top_k / cfg.n_experts)
+        body -= moe_layers * inactive
+
+    n_active = body + cfg.vocab_size * cfg.d_model  # logits matmul
+    tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode"
+                                  else 1)
+    per_token = 6 * n_active if kind == "train" else 2 * n_active
+    return float(per_token) * tokens
+
+
+def analyze(arch: str, shape: str, mesh_name: str, n_devices: int,
+            cfg, spec, kind: str, cost: Dict[str, float],
+            hlo_text: str, mem: Optional[Dict] = None) -> Roofline:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    counts = coll.pop("_counts")
+    coll_total = float(sum(coll.values()))
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, spec, kind)
+    hlo_total = flops_dev * n_devices
+    useful = mf / hlo_total if hlo_total else 0.0
+
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_total,
+        collective_breakdown={**coll, **{f"n_{k}": v
+                                         for k, v in counts.items()}},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mf, useful_ratio=useful,
+        bytes_per_device_peak=(mem or {}).get("bytes"),
+    )

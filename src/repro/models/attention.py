@@ -1,0 +1,188 @@
+"""Attention computation layer (jnp-level, kernel-selectable).
+
+``sdpa`` is the single entry point used by both the eager ``nn.functional``
+path and the functional LM models.  It handles:
+
+  * GQA/MQA: k/v with fewer heads than q are broadcast per group,
+  * causal masking, sliding-window (local) masking, explicit masks,
+  * backend selection: "ref" (pure jnp, the oracle), "pallas" (flash
+    kernel), "auto" (pallas when available for the shape, else ref).
+
+All reference math upcasts softmax statistics to f32, matching the Pallas
+kernels bit-for-bit in structure so allclose checks are tight.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_PALLAS_MIN_SEQ = 128  # below this the ref path is cheaper than tiling
+
+
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, Hkv, S, D) -> (B, Hkv*n_rep, S, D)."""
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    k = jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d))
+    return k.reshape(b, h * n_rep, s, d)
+
+
+def _build_mask(q_len: int, kv_len: int, is_causal: bool,
+                window: Optional[int], dtype) -> Optional[jnp.ndarray]:
+    if not is_causal and window is None:
+        return None
+    # query i attends key j where j <= i + (kv_len - q_len)  (causal)
+    # and j > i + (kv_len - q_len) - window                  (sliding)
+    q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+    k_pos = jnp.arange(kv_len)[None, :]
+    ok = jnp.ones((q_len, kv_len), dtype=bool)
+    if is_causal:
+        ok = ok & (k_pos <= q_pos)
+    if window is not None:
+        ok = ok & (k_pos > q_pos - window)
+    return ok
+
+
+def sdpa_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             mask: Optional[jnp.ndarray] = None,
+             is_causal: bool = False,
+             scale: Optional[float] = None,
+             window: Optional[int] = None) -> jnp.ndarray:
+    """Pure-jnp oracle. q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        k = repeat_kv(k, hq // hkv)
+        v = repeat_kv(v, hq // hkv)
+    scale = scale if scale is not None else d ** -0.5
+
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    structural = _build_mask(sq, k.shape[2], is_causal, window, q.dtype)
+    if structural is not None:
+        logits = jnp.where(structural[None, None], logits,
+                           jnp.finfo(jnp.float32).min)
+    if mask is not None:
+        if mask.dtype == jnp.bool_:
+            logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+        else:
+            logits = logits + mask.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def context_sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 scale: Optional[float], causal: bool,
+                 window: Optional[int]) -> jnp.ndarray:
+    """Manual context-parallel attention (used when heads don't divide TP
+    and the residual stream is sequence-sharded).
+
+    GSPMD cannot derive ring attention: left alone it all-gathers the
+    full f32 (B, H, S, D) q/k/v per layer (§Perf yi iteration log).
+    Here each model rank keeps its LOCAL query slice and all-gathers only
+    the (much smaller, GQA-reduced, bf16) K/V — the KV-gather variant of
+    context parallelism.  Causal masking uses global query offsets.
+    """
+    from ..distributed import act_sharding as AS
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    import functools
+
+    scope = AS._get()
+    mesh = scope.mesh
+    axis = scope.model
+    b, hq, s_full, d = q.shape
+    batch_ax = scope.batch if (b > 1 and b % scope.data_size == 0) \
+        else None
+    qspec = P(batch_ax, None, axis, None)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(qspec, qspec, qspec), out_specs=qspec,
+        check_rep=False)
+    def _inner(q_l, k_l, v_l):
+        idx = jax.lax.axis_index(axis)
+        k_g = jax.lax.all_gather(k_l, axis, axis=2, tiled=True)
+        v_g = jax.lax.all_gather(v_l, axis, axis=2, tiled=True)
+        s_loc = q_l.shape[2]
+        q_pos = idx * s_loc + jnp.arange(s_loc)[:, None]
+        k_pos = jnp.arange(k_g.shape[2])[None, :]
+        ok = jnp.ones((s_loc, k_g.shape[2]), bool)
+        if causal:
+            ok = ok & (k_pos <= q_pos)
+        if window is not None:
+            ok = ok & (k_pos > q_pos - window)
+        return sdpa_ref(q_l, k_g, v_g, mask=ok[None, None], scale=scale)
+
+    return _inner(q, k, v)
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray] = None,
+         is_causal: bool = False,
+         scale: Optional[float] = None,
+         window: Optional[int] = None,
+         backend: str = "auto") -> jnp.ndarray:
+    if backend == "ref":
+        import os
+        from ..distributed import act_sharding as AS
+        scope = AS._get()
+        if (os.environ.get("REPRO_SEQ_SHARD") == "1" and scope is not None
+                and scope.model is not None and mask is None
+                and q.shape[1] % scope.model_size != 0
+                and q.shape[2] % scope.model_size == 0
+                and q.shape[2] == k.shape[2]):
+            return context_sdpa(q, k, v, scale, is_causal, window)
+        return sdpa_ref(q, k, v, mask, is_causal, scale, window)
+    if backend in ("auto", "pallas"):
+        if mask is None and q.shape[2] >= _PALLAS_MIN_SEQ:
+            try:
+                from ..kernels import ops as kops
+                return kops.flash_attention(
+                    q, k, v, causal=is_causal, scale=scale, window=window)
+            except Exception:
+                if backend == "pallas":
+                    raise
+        return sdpa_ref(q, k, v, mask, is_causal, scale, window)
+    raise ValueError(f"unknown sdpa backend {backend!r}")
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     backend: str = "auto") -> jnp.ndarray:
+    """Single-position decode: q (B, Hq, 1, D) against a (B, Hkv, Smax, D)
+    cache filled up to ``cache_len`` (int or (B,) array)."""
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    smax = k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+
+    if backend in ("auto", "pallas"):
+        try:
+            from ..kernels import ops as kops
+            return kops.decode_attention(q, k_cache, v_cache, cache_len,
+                                         scale=scale, window=window)
+        except Exception:
+            if backend == "pallas":
+                raise
+
+    k = repeat_kv(k_cache, hq // hkv)
+    v = repeat_kv(v_cache, hq // hkv)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(smax)[None, None, None, :]
+    clen = jnp.asarray(cache_len)
+    clen = jnp.broadcast_to(clen.reshape(-1), (b,)).reshape(b, 1, 1, 1)
+    valid = pos < clen
+    lo = (clen - window) if window is not None else None
+    if lo is not None:
+        valid = valid & (pos >= jnp.maximum(lo, 0))
+    logits = jnp.where(valid, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,679 @@
+"""Functional LM building blocks (pure jnp: params are dict pytrees).
+
+These power the 10 assigned architectures.  Everything here is pure
+``f(params, x) -> y`` so it jits, pjits, vmaps, and differentiates through
+JAX AD; the eager Module world wraps the same math where needed.
+
+Param layout conventions:
+  * linear weights are stored (in, out) — column-parallel friendly,
+  * per-layer-group params are STACKED on a leading axis and the model
+    scans over groups (compact HLO, fast multi-pod compile),
+  * dtype: ``param_dtype`` for weights, f32 for norm/router stats.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from ..distributed import act_sharding as AS
+
+Params = Dict[str, Any]
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# norms (f32 statistics)
+# ----------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             offset: float = 0.0) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (offset + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, H, S, D), positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if angles.ndim == 2:                              # (S, D/2)
+        angles = angles[None, None]                   # (1,1,S,D/2)
+    else:                                             # (B, S, D/2)
+        angles = angles[:, None]                      # (B,1,S,D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# attention (GQA / MQA / sliding window) with optional KV cache
+# ----------------------------------------------------------------------
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+              head_dim: int, dtype, qkv_bias: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def attention(p: Params, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, causal: bool = True,
+              window: Optional[int] = None,
+              rope_theta: Optional[float] = 10000.0,
+              positions: Optional[jnp.ndarray] = None,
+              query_scale: Optional[float] = None,
+              cache: Optional[Params] = None,
+              cache_pos=None,
+              cache_len=None,
+              abs_pos_arg=None,
+              q_norm: bool = False,
+              backend: str = "auto") -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, D).  With ``cache`` given, performs decode: writes K/V at
+    slot ``cache_pos`` and attends over ``cache_len`` valid slots (ring
+    buffers pass cache_pos = pos % ring and cache_len = min(pos+1, ring);
+    keys are stored pre-roped at absolute positions so slot order is
+    irrelevant to the softmax)."""
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, n_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, n_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    q = AS.constrain(q, "bhsd", heads=n_heads)
+    k = AS.constrain(k, "bhsd", heads=n_kv_heads)
+    v = AS.constrain(v, "bhsd", heads=n_kv_heads)
+
+    if positions is None:
+        if cache is not None and cache_pos is not None:
+            abs_pos = cache_pos if abs_pos_arg is None else abs_pos_arg
+            positions = (jnp.asarray(abs_pos).reshape(-1)[None]
+                         + jnp.arange(s)[None, :]).astype(jnp.int32)
+            if positions.shape[0] == 1 and b > 1:
+                positions = jnp.broadcast_to(positions, (b, s))
+        else:
+            positions = jnp.arange(s)
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if q_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+
+    if cache is None:
+        out = A.sdpa(q, k, v, is_causal=causal, window=window, scale=scale,
+                     backend=backend)
+        out = AS.constrain(out, "bhsd", heads=n_heads)
+        new_cache = None
+    else:
+        # decode: scatter new K/V into the ring/linear cache then attend
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype),
+            (0, 0, jnp.asarray(cache_pos, jnp.int32), 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype),
+            (0, 0, jnp.asarray(cache_pos, jnp.int32), 0))
+        clen = (jnp.asarray(cache_pos) + s if cache_len is None
+                else jnp.asarray(cache_len))
+        out = A.decode_attention(q, k_cache, v_cache, cache_len=clen,
+                                 scale=scale, window=window, backend=backend)
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"], new_cache
+
+
+# ----------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ----------------------------------------------------------------------
+
+def mla_init(key, d_model: int, n_heads: int, *, q_lora_rank: int,
+             kv_lora_rank: int, nope_dim: int, rope_dim: int, v_dim: int,
+             dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], d_model, q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], q_lora_rank,
+                           n_heads * (nope_dim + rope_dim), dtype),
+        "wkv_a": dense_init(ks[2], d_model, kv_lora_rank + rope_dim, dtype),
+        "wkv_b": dense_init(ks[3], kv_lora_rank,
+                            n_heads * (nope_dim + v_dim), dtype),
+        "q_norm": jnp.ones((q_lora_rank,), jnp.float32),
+        "kv_norm": jnp.ones((kv_lora_rank,), jnp.float32),
+        "wo": dense_init(ks[4], n_heads * v_dim, d_model, dtype),
+    }
+
+
+def mla_attention(p: Params, x: jnp.ndarray, *, n_heads: int,
+                  nope_dim: int, rope_dim: int, v_dim: int,
+                  kv_lora_rank: int, causal: bool = True,
+                  rope_theta: float = 10000.0,
+                  cache: Optional[Params] = None, cache_pos=None,
+                  backend: str = "auto") -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Latent-compressed attention.  The decode cache stores ONLY the
+    latent c_kv (kv_lora_rank) + shared rope key (rope_dim) per token —
+    the memory win that defines MLA."""
+    b, s, _ = x.shape
+    qd = nope_dim + rope_dim
+
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(b, s, n_heads, qd).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+
+    kv_a = x @ p["wkv_a"]                        # (B,S,rank+rope)
+    c_kv = rms_norm(kv_a[..., :kv_lora_rank], p["kv_norm"])
+    k_rope = kv_a[..., kv_lora_rank:]            # shared across heads
+
+    if cache is None:
+        positions = jnp.arange(s)
+    else:
+        positions = jnp.asarray(cache_pos) + jnp.arange(s)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    k_rope = apply_rope(k_rope[:, None], positions, rope_theta)  # (B,1,S,r)
+
+    if cache is not None:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+            (0, jnp.asarray(cache_pos, jnp.int32), 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, 0, jnp.asarray(cache_pos, jnp.int32), 0))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        kv_len = c_kv.shape[1]
+    else:
+        new_cache = None
+        kv_len = s
+
+    # expand latent to per-head K_nope and V
+    kv = (c_kv @ p["wkv_b"]).reshape(b, kv_len, n_heads, nope_dim + v_dim)
+    k_nope = kv[..., :nope_dim].transpose(0, 2, 1, 3)
+    v = kv[..., nope_dim:].transpose(0, 2, 1, 3)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, n_heads, kv_len, rope_dim))],
+        axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = qd ** -0.5
+
+    if cache is None:
+        out = A.sdpa(qfull, k, v, is_causal=causal, scale=scale,
+                     backend=backend)
+    else:
+        out = A.decode_attention(qfull, k, v,
+                                 cache_len=jnp.asarray(cache_pos) + s,
+                                 scale=scale, backend="ref")
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * v_dim)
+    return out @ p["wo"], new_cache
+
+
+# ----------------------------------------------------------------------
+# FFN: dense GLU variants
+# ----------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype,
+             gated: bool = True) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, activation: str = "silu") -> jnp.ndarray:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        gate = x @ p["w_gate"]
+        h = _act(gate, activation) * up
+    else:
+        h = _act(up, activation)
+    h = AS.constrain(h, "btf")
+    return h @ p["w_down"]
+
+
+def _act(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+# ----------------------------------------------------------------------
+# MoE: GShard-style capacity dispatch (EP-shardable over the expert axis)
+# ----------------------------------------------------------------------
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, dtype,
+             gated: bool = True, n_shared: int = 0,
+             d_ff_shared: Optional[int] = None,
+             n_padded: Optional[int] = None) -> Params:
+    ks = jax.random.split(key, 5)
+    n_slots = n_padded or n_experts   # padded slots never receive tokens
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (n_slots, d_model, d_ff),
+                                   jnp.float32)
+                 / math.sqrt(d_model)).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (n_slots, d_ff, d_model),
+                                     jnp.float32)
+                   / math.sqrt(d_ff)).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (n_slots, d_model, d_ff),
+                                         jnp.float32)
+                       / math.sqrt(d_model)).astype(dtype)
+    if n_shared:
+        p["shared"] = mlp_init(ks[4], d_model,
+                               d_ff_shared or (d_ff * n_shared), dtype,
+                               gated=gated)
+    return p
+
+
+def moe(p: Params, x: jnp.ndarray, *, top_k: int, n_experts: int,
+        capacity_factor: float = 1.25, activation: str = "silu",
+        aux_loss_weight: float = 0.01,
+        n_token_groups: Optional[int] = None,
+        n_padded: Optional[int] = None
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard-style grouped token-choice top-k with per-group capacity.
+
+    Tokens are split into G groups (G = the data-parallel degree when a
+    sharding scope is active, so each group is device-local); every group
+    computes its own top-k + capacity C = cf·Tg·k/E.  The dispatch tensor
+    is (G, Tg, E, C) — O(Tg·E·C) per group instead of the O(T²·E) a
+    global-capacity formulation would need — and shards G over the batch
+    axes, E over the model axis (EP).  Returns (output, aux_loss).
+    """
+    b, s, d = x.shape
+    t = b * s
+    if n_token_groups is None:
+        scope = AS._get()
+        ds = scope.data_size if scope is not None else 1
+        # Group-size perf rule: the one-hot dispatch einsums cost
+        # 2·Tg·(E·C)·D with E·C = cf·k·Tg  →  QUADRATIC in tokens/group.
+        # Keep groups near REPRO_MOE_GROUP_TOKENS tokens (default 1024,
+        # dispatch ≲ expert compute), rounded to a multiple of the DP
+        # degree so groups shard evenly.  Set =0 for the naive
+        # one-group-per-DP-shard baseline (§Perf iteration record).
+        tgt = int(os.environ.get("REPRO_MOE_GROUP_TOKENS", "1024"))
+        if tgt > 0 and t > tgt:
+            n_token_groups = max(ds, (t // tgt) // max(ds, 1) * ds)
+        else:
+            n_token_groups = ds
+    g = max(1, min(n_token_groups, t))
+    while t % g:
+        g -= 1
+    tg = t // g
+    xt = x.reshape(g, tg, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    e_slots = n_padded or n_experts
+    if e_slots != n_experts:
+        # dead expert slots (EP divisibility): never routed to
+        probs = jnp.pad(probs, ((0, 0), (0, 0),
+                                (0, e_slots - n_experts)))
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(capacity_factor * tg * top_k / n_experts))
+    capacity = min(capacity, tg)
+
+    # position of each (token, k) within its expert queue (per group)
+    onehot = jax.nn.one_hot(gate_idx, e_slots,
+                            dtype=jnp.int32)                 # (G,Tg,k,E)
+    flat = onehot.reshape(g, tg * top_k, e_slots)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(
+        g, tg, top_k, e_slots)
+    pos = (pos_in_expert * onehot).sum(-1)                   # (G, Tg, k)
+    kept = pos < capacity
+
+    # dispatch / combine (G, Tg, E, C)
+    disp = (jax.nn.one_hot(gate_idx, e_slots, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(pos, capacity, dtype=x.dtype)[..., None, :]
+            * kept[..., None, None].astype(x.dtype))         # (G,Tg,k,E,C)
+    dispatch = disp.sum(2)                                   # (G,Tg,E,C)
+    combine = (disp * gate_vals[..., None, None].astype(x.dtype)).sum(2)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xt)   # (G,E,C,D)
+    expert_in = AS.constrain(expert_in, "gecd", experts=e_slots)
+    up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+        h = _act(gate, activation) * up
+    else:
+        h = _act(up, activation)
+    h = AS.constrain(h, "gecf", experts=e_slots)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    expert_out = AS.constrain(expert_out, "gecd", experts=e_slots)
+    yt = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+
+    # load-balancing aux loss (Switch):  E * Σ_e f_e · P_e
+    density = onehot.sum(2).astype(jnp.float32).mean((0, 1))  # (E,)
+    router_prob = probs.mean((0, 1))
+    aux = aux_loss_weight * n_experts * jnp.sum(
+        density[:n_experts] * router_prob[:n_experts])
+
+    y = yt.reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, activation)
+    return y, aux
+
+
+# ----------------------------------------------------------------------
+# Mamba (selective SSM) — Jamba's mixer
+# ----------------------------------------------------------------------
+
+def mamba_init(key, d_model: int, *, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: Optional[int] = None,
+               dtype=jnp.bfloat16) -> Params:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32)
+                   / math.sqrt(d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (d_inner,)) * 0.1,
+                     1e-3, 0.1))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32),
+            (d_inner, d_state))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d_model, dtype),
+        "norm": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def _ssm_scan_ref(x, dt, B, C, A, D):
+    """Sequential selective scan.  x:(B,S,Di) dt:(B,S,Di) B/C:(B,S,N).
+    Returns y:(B,S,Di)."""
+    dA = jnp.exp(dt[..., None] * A)                      # (B,S,Di,N)
+    dBx = (dt * x)[..., None] * B[:, :, None, :]         # (B,S,Di,N)
+
+    def step(h, inputs):
+        dA_t, dBx_t, C_t = inputs
+        h = dA_t * h + dBx_t                             # (B,Di,N)
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    b, s, di = x.shape
+    n = A.shape[-1]
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    xs = (dA.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dBx.transpose(1, 0, 2, 3).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    return y + x * D.astype(x.dtype)
+
+
+def mamba(p: Params, x: jnp.ndarray, *, d_state: int = 16, d_conv: int = 4,
+          expand: int = 2, dt_rank: Optional[int] = None,
+          cache: Optional[Params] = None,
+          backend: str = "auto") -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, D).  With cache: single-step decode using (conv_state,
+    ssm_state)."""
+    b, s, d = x.shape
+    d_inner = expand * d
+    dt_rank = dt_rank or max(1, d // 16)
+
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                    # (B,S,Di)
+
+    if cache is None:
+        # causal depthwise conv1d along seq
+        pad = jnp.pad(xi, ((0, 0), (d_conv - 1, 0), (0, 0)))
+        windows = jnp.stack(
+            [pad[:, i:i + s] for i in range(d_conv)], axis=-1)  # (B,S,Di,K)
+        xc = jnp.einsum("bsdk,kd->bsd", windows,
+                        p["conv_w"]) + p["conv_b"]
+        new_conv_state = pad[:, -(d_conv - 1):] if d_conv > 1 else None
+    else:
+        conv_state = cache["conv"]                       # (B, K-1, Di)
+        pad = jnp.concatenate([conv_state, xi], axis=1)
+        xc = jnp.einsum("bkd,kd->bd", pad[:, -d_conv:],
+                        p["conv_w"])[:, None] + p["conv_b"]
+        new_conv_state = pad[:, -(d_conv - 1):]
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["x_proj"]                              # (B,S,R+2N)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj"]
+        + p["dt_bias"].astype(x.dtype))                  # (B,S,Di)
+    Bm = proj[..., dt_rank:dt_rank + d_state]
+    Cm = proj[..., dt_rank + d_state:]
+    A = -jnp.exp(p["A_log"])                             # (Di,N)
+
+    if cache is None:
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            y = kops.mamba_scan(xc, dt, Bm, Cm, A, p["D"])
+        else:
+            y = _ssm_scan_ref(xc, dt, Bm, Cm, A, p["D"])
+        new_ssm_state = None
+    else:
+        h = cache["ssm"]                                 # (B,Di,N) f32
+        dA = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * A)
+        dBx = (dt[:, 0] * xc[:, 0]).astype(jnp.float32)[..., None] \
+            * Bm[:, 0, None, :].astype(jnp.float32)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h,
+                       Cm[:, 0].astype(jnp.float32))[:, None]
+        y = y.astype(x.dtype) + xc * p["D"].astype(x.dtype)
+        new_ssm_state = h
+
+    y = rms_norm(y, p["norm"])
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if cache is None:
+        return out, None
+    return out, {"conv": new_conv_state, "ssm": new_ssm_state}
+
+
+# ----------------------------------------------------------------------
+# RWKV-6 ("Finch") — data-dependent decay linear attention
+# ----------------------------------------------------------------------
+
+def rwkv6_init(key, d_model: int, *, head_dim: int = 64,
+               lora_r: int = 64, dtype=jnp.bfloat16) -> Params:
+    n_heads = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift interpolation weights (static mu per channel)
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_v": jnp.full((d_model,), 0.5, dtype),
+        "mu_w": jnp.full((d_model,), 0.5, dtype),
+        "mu_g": jnp.full((d_model,), 0.5, dtype),
+        "w_r": dense_init(ks[0], d_model, d_model, dtype),
+        "w_k": dense_init(ks[1], d_model, d_model, dtype),
+        "w_v": dense_init(ks[2], d_model, d_model, dtype),
+        "w_g": dense_init(ks[3], d_model, d_model, dtype),
+        "w_o": dense_init(ks[4], d_model, d_model, dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(base + lora(x)))
+        "decay_base": jnp.full((d_model,), -6.0, jnp.float32),
+        "decay_a": dense_init(ks[5], d_model, lora_r, dtype),
+        "decay_b": dense_init(ks[6], lora_r, d_model, dtype),
+        "bonus": (jax.random.normal(ks[7], (n_heads, head_dim),
+                                    jnp.float32) * 0.02),
+        "ln_out": jnp.ones((d_model,), jnp.float32),
+        # channel-mix (FFN half of the RWKV block)
+        "cm_mu_k": jnp.full((d_model,), 0.5, dtype),
+        "cm_k": dense_init(ks[8], d_model, int(3.5 * d_model), dtype),
+        "cm_v": dense_init(ks[9], int(3.5 * d_model), d_model, dtype),
+        "cm_r": dense_init(ks[10], d_model, d_model, dtype),
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray,
+                 prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x[t-1] (zero/`prev` at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv6_ref(r, k, v, w, u):
+    """Sequential WKV-6.  r/k/v: (B,H,S,D); w: (B,H,S,D) decays in (0,1);
+    u: (H,D) bonus.  Returns (out (B,H,S,D), final state (B,H,D,D))."""
+    b, h, s, dd = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B,H,D)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,Dk,Dv)
+        out = jnp.einsum(
+            "bhd,bhde->bhe", r_t,
+            state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, out
+
+    state0 = jnp.zeros((b, h, dd, dd), jnp.float32)
+    seq = (r.transpose(2, 0, 1, 3).astype(jnp.float32),
+           k.transpose(2, 0, 1, 3).astype(jnp.float32),
+           v.transpose(2, 0, 1, 3).astype(jnp.float32),
+           w.transpose(2, 0, 1, 3).astype(jnp.float32))
+    state, outs = jax.lax.scan(step, state0, seq)
+    return outs.transpose(1, 2, 0, 3).astype(r.dtype), state
+
+
+def rwkv6(p: Params, x: jnp.ndarray, *, head_dim: int = 64,
+          cache: Optional[Params] = None,
+          backend: str = "auto") -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Time-mix + channel-mix RWKV6 block body (pre-norms applied by the
+    caller).  x: (B,S,D)."""
+    b, s, d = x.shape
+    n_heads = d // head_dim
+
+    prev = cache["shift"] if cache is not None else None
+    xs = _token_shift(x, prev)
+
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = mix(p["mu_r"]) @ p["w_r"]
+    k = mix(p["mu_k"]) @ p["w_k"]
+    v = mix(p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["w_g"])
+    # data-dependent decay (Finch): per-token, per-channel
+    decay_x = mix(p["mu_w"])
+    w_log = p["decay_base"] + (jnp.tanh(decay_x @ p["decay_a"])
+                               @ p["decay_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                         # (B,S,D) in (0,1)
+
+    def heads(t):
+        return t.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+    r_h, k_h, v_h, w_h = heads(r), heads(k), heads(v), heads(
+        w.astype(x.dtype))
+
+    state_in = cache["wkv"] if cache is not None else None
+    if backend == "pallas" and cache is None:
+        from ..kernels import ops as kops
+        out, state = kops.rwkv6_scan(r_h, k_h, v_h, w_h, p["bonus"])
+    else:
+        if state_in is not None:
+            # fold initial state: run scan from provided state
+            out, state = _wkv6_ref_with_state(r_h, k_h, v_h, w_h,
+                                              p["bonus"], state_in)
+        else:
+            out, state = _wkv6_ref(r_h, k_h, v_h, w_h, p["bonus"])
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    out = rms_norm(out, p["ln_out"]) * g
+    tm_out = out @ p["w_o"]
+
+    # channel mix
+    y = x + tm_out
+    ys = _token_shift(y, cache["cm_shift"] if cache is not None else None)
+    xk = y + (ys - y) * p["cm_mu_k"]
+    cm = (jnp.square(jax.nn.relu(xk @ p["cm_k"]))) @ p["cm_v"]
+    cm = jax.nn.sigmoid(y @ p["cm_r"]) * cm
+    out_final = tm_out + cm  # caller adds residual over x
+
+    if cache is None:
+        return out_final, None
+    return out_final, {"wkv": state, "shift": x[:, -1:],
+                       "cm_shift": y[:, -1:]}
+
+
+def _wkv6_ref_with_state(r, k, v, w, u, state0):
+    b, h, s, dd = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhd,bhde->bhe", r_t,
+                         state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, out
+
+    seq = (r.transpose(2, 0, 1, 3).astype(jnp.float32),
+           k.transpose(2, 0, 1, 3).astype(jnp.float32),
+           v.transpose(2, 0, 1, 3).astype(jnp.float32),
+           w.transpose(2, 0, 1, 3).astype(jnp.float32))
+    state, outs = jax.lax.scan(step, state0.astype(jnp.float32), seq)
+    return outs.transpose(1, 2, 0, 3).astype(r.dtype), state

@@ -1,0 +1,512 @@
+"""Configurable LM covering all assigned architecture families.
+
+A model is a *pattern* of heterogeneous blocks (attention / sliding-window
+attention / MLA / Mamba / RWKV6 mixers × dense / MoE / none FFNs) repeated
+``n_groups`` times (+ an unrolled tail when the pattern doesn't divide
+n_layers).  Per-group parameters are stacked on a leading axis and the
+forward pass ``lax.scan``s over groups — compact HLO, O(pattern) compile
+cost instead of O(n_layers), and remat applies per group.
+
+Two entry points per model:
+  * ``forward(params, batch)``      — full-sequence (train / prefill)
+  * ``decode_step(params, cache, tokens, pos)`` — single-token serving step
+    against a mutable-cache pytree (attention KV, sliding ring-buffers,
+    Mamba conv/ssm state, RWKV wkv state).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from ..distributed import act_sharding as AS
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    mixer: str = "attn"          # attn | sliding | mla | mamba | rwkv
+    ffn: str = "dense"           # dense | moe | none
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    pattern: Tuple[BlockSpec, ...] = (BlockSpec(),)
+    # attention
+    causal: bool = True
+    window: Optional[int] = None          # for "sliding" mixers
+    rope_theta: Optional[float] = 10000.0
+    rope_theta_local: Optional[float] = None  # sliding layers (gemma3)
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    query_scale: Optional[float] = None   # e.g. gemma uses head_dim**-0.5
+    # MoE
+    n_experts: int = 0
+    n_experts_padded: Optional[int] = None   # pad expert SLOTS (dead,
+                                             # -inf router) for EP
+                                             # divisibility
+    top_k: int = 2
+    n_shared_experts: int = 0
+    d_ff_shared: Optional[int] = None
+    capacity_factor: float = 1.25
+    moe_dense_residual: bool = False      # arctic: dense FFN in parallel
+    d_ff_dense_residual: Optional[int] = None
+    # MLA (MiniCPM3 / DeepSeek-V2)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    mla_nope_dim: int = 0
+    mla_rope_dim: int = 0
+    mla_v_dim: int = 0
+    # mamba
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # rwkv
+    rwkv_head_dim: int = 64
+    # misc
+    act: str = "silu"
+    gated_mlp: bool = True                # False: plain 2-matrix FFN
+    norm: str = "rms"                     # rms | layer
+    norm_offset: float = 0.0              # 1.0 for gemma (1+w)
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    embed_scale: bool = False             # gemma: x *= sqrt(d_model)
+    final_softcap: Optional[float] = None
+    input_mode: str = "tokens"            # tokens | embeddings
+    lm_head: bool = True                  # False → encoder (hubert)
+    n_classes: Optional[int] = None       # encoder classification head
+    param_dtype: Any = jnp.bfloat16
+    remat: str = "full"                   # none | full
+    unroll_groups: bool = False           # True: Python loop (exact
+                                          # cost_analysis; scan counts the
+                                          # body once) — dry-run cost pass
+    attn_backend: str = "auto"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail(self) -> Tuple[BlockSpec, ...]:
+        rem = self.n_layers % len(self.pattern)
+        return self.pattern[:rem]
+
+    def active_params_per_token_factor(self) -> float:
+        """Fraction of MoE FFN params active per token (for 6·N_active·D)."""
+        if self.n_experts == 0:
+            return 1.0
+        return self.top_k / self.n_experts
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def _norm_init(cfg: LMConfig):
+    if cfg.norm_offset:
+        return jnp.zeros((cfg.d_model,), jnp.float32)
+    return jnp.ones((cfg.d_model,), jnp.float32)
+
+
+def _block_init(key, cfg: LMConfig, spec: BlockSpec) -> Params:
+    kmix, kffn, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": _norm_init(cfg)}
+    if cfg.norm == "layer":
+        p["norm1_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+
+    if spec.mixer in ("attn", "sliding"):
+        p["attn"] = L.attn_init(kmix, cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.hd, cfg.param_dtype,
+                                qkv_bias=cfg.qkv_bias)
+        if cfg.qk_norm:
+            p["attn"]["q_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+            p["attn"]["k_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+    elif spec.mixer == "mla":
+        p["attn"] = L.mla_init(
+            kmix, cfg.d_model, cfg.n_heads, q_lora_rank=cfg.q_lora_rank,
+            kv_lora_rank=cfg.kv_lora_rank, nope_dim=cfg.mla_nope_dim,
+            rope_dim=cfg.mla_rope_dim, v_dim=cfg.mla_v_dim,
+            dtype=cfg.param_dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = L.mamba_init(
+            kmix, cfg.d_model, d_state=cfg.mamba_d_state,
+            d_conv=cfg.mamba_d_conv, expand=cfg.mamba_expand,
+            dtype=cfg.param_dtype)
+    elif spec.mixer == "rwkv":
+        p["rwkv"] = L.rwkv6_init(kmix, cfg.d_model,
+                                 head_dim=cfg.rwkv_head_dim,
+                                 dtype=cfg.param_dtype)
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.ffn != "none":
+        p["norm2"] = _norm_init(cfg)
+        if cfg.norm == "layer":
+            p["norm2_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if spec.ffn == "dense":
+        p["mlp"] = L.mlp_init(kffn, cfg.d_model, cfg.d_ff, cfg.param_dtype,
+                              gated=cfg.gated_mlp)
+    elif spec.ffn == "moe":
+        p["moe"] = L.moe_init(
+            kffn, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.param_dtype,
+            gated=True, n_shared=cfg.n_shared_experts,
+            d_ff_shared=cfg.d_ff_shared,
+            n_padded=cfg.n_experts_padded)
+        if cfg.moe_dense_residual:
+            p["mlp"] = L.mlp_init(
+                k3, cfg.d_model,
+                cfg.d_ff_dense_residual or cfg.d_ff, cfg.param_dtype,
+                gated=True)
+
+    return p
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, 4)
+    params: Params = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                              cfg.param_dtype),
+        "final_norm": _norm_init(cfg),
+    }
+    if cfg.norm == "layer":
+        params["final_norm_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+
+    # stacked group params: vmap init over group index
+    if cfg.n_groups > 0:
+        gkeys = jax.random.split(keys[1], cfg.n_groups)
+
+        def one_group(k):
+            pkeys = jax.random.split(k, len(cfg.pattern))
+            return [
+                _block_init(pk, cfg, spec)
+                for pk, spec in zip(pkeys, cfg.pattern)
+            ]
+
+        params["groups"] = jax.vmap(one_group)(gkeys)
+    if cfg.tail:
+        tkeys = jax.random.split(keys[2], len(cfg.tail))
+        params["tail"] = [
+            _block_init(tk, cfg, spec)
+            for tk, spec in zip(tkeys, cfg.tail)
+        ]
+    if cfg.lm_head and not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[3], cfg.d_model,
+                                         cfg.vocab_size, cfg.param_dtype)
+    if not cfg.lm_head and cfg.n_classes:
+        params["cls_head"] = L.dense_init(keys[3], cfg.d_model,
+                                          cfg.n_classes, cfg.param_dtype)
+    return params
+
+
+def abstract_params(cfg: LMConfig) -> Params:
+    """Shape-only params (no allocation) for the multi-pod dry-run."""
+    return jax.eval_shape(partial(init_params, cfg),
+                          jax.random.key(0))
+
+
+# ----------------------------------------------------------------------
+# block application
+# ----------------------------------------------------------------------
+
+def _norm(cfg: LMConfig, x, w, b=None):
+    if cfg.norm == "layer":
+        return L.layer_norm(x, w, b, cfg.norm_eps)
+    return L.rms_norm(x, w, cfg.norm_eps, cfg.norm_offset)
+
+
+def _apply_block(cfg: LMConfig, spec: BlockSpec, p: Params, x, aux,
+                 cache: Optional[Params] = None, cache_pos=None):
+    """cache_pos: absolute position (scalar) in decode.  Sliding layers
+    translate it to a ring-buffer slot internally."""
+    h = _norm(cfg, x, p["norm1"], p.get("norm1_b"))
+    new_cache = None
+
+    if spec.mixer in ("attn", "sliding"):
+        sliding = spec.mixer == "sliding"
+        window = cfg.window if sliding else None
+        theta = (cfg.rope_theta_local
+                 if (sliding and cfg.rope_theta_local) else cfg.rope_theta)
+        write_pos, cache_len, dec_window = cache_pos, None, window
+        if cache is not None and sliding:
+            ring = cache["k"].shape[2]
+            write_pos = jnp.mod(cache_pos, ring)
+            cache_len = jnp.minimum(cache_pos + h.shape[1], ring)
+            dec_window = None  # the ring IS the window
+        out, new_cache = L.attention(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, causal=cfg.causal, window=dec_window,
+            rope_theta=theta, query_scale=cfg.query_scale,
+            cache=cache, cache_pos=write_pos, cache_len=cache_len,
+            abs_pos_arg=cache_pos, q_norm=cfg.qk_norm,
+            backend=cfg.attn_backend)
+    elif spec.mixer == "mla":
+        out, new_cache = L.mla_attention(
+            p["attn"], h, n_heads=cfg.n_heads, nope_dim=cfg.mla_nope_dim,
+            rope_dim=cfg.mla_rope_dim, v_dim=cfg.mla_v_dim,
+            kv_lora_rank=cfg.kv_lora_rank, causal=cfg.causal,
+            rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
+            backend=cfg.attn_backend)
+    elif spec.mixer == "mamba":
+        out, new_cache = L.mamba(
+            p["mamba"], h, d_state=cfg.mamba_d_state,
+            d_conv=cfg.mamba_d_conv, expand=cfg.mamba_expand, cache=cache,
+            backend=cfg.attn_backend)
+    elif spec.mixer == "rwkv":
+        out, new_cache = L.rwkv6(p["rwkv"], h, head_dim=cfg.rwkv_head_dim,
+                                 cache=cache, backend=cfg.attn_backend)
+    x = x + out
+
+    if spec.ffn != "none":
+        h2 = _norm(cfg, x, p["norm2"], p.get("norm2_b"))
+        if spec.ffn == "dense":
+            x = x + L.mlp(p["mlp"], h2, cfg.act)
+        else:
+            # decode is DROPLESS (capacity = full token count): capacity
+            # dropping is a training-throughput trade-off, not a serving
+            # semantic
+            cf = (cfg.capacity_factor if cache is None
+                  else float(cfg.n_experts) / cfg.top_k)
+            moe_out, moe_aux = L.moe(
+                p["moe"], h2, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                capacity_factor=cf, activation=cfg.act,
+                n_padded=cfg.n_experts_padded)
+            if cfg.moe_dense_residual:
+                moe_out = moe_out + L.mlp(p["mlp"], h2, cfg.act)
+            x = x + moe_out
+            aux = aux + moe_aux
+    return x, aux, new_cache
+
+
+# ----------------------------------------------------------------------
+# forward (train / prefill)
+# ----------------------------------------------------------------------
+
+def forward(cfg: LMConfig, params: Params, tokens=None, embeds=None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits, aux_loss).  ``tokens``: (B, S) int32 — or pass
+    precomputed ``embeds`` (B, S, D) for embedding-mode archs."""
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = embeds.astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = AS.constrain(x, "btd")
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for j, spec in enumerate(cfg.pattern):
+            x, aux, _ = _apply_block(cfg, spec, gp[j], x, aux)
+            x = AS.constrain(x, "btd")
+        return (x, aux), None
+
+    body = group_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    x_aux = (x, aux0)
+    if cfg.n_groups > 0:
+        if cfg.unroll_groups:
+            for gi in range(cfg.n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[gi],
+                                            params["groups"])
+                x_aux, _ = body(x_aux, gp)
+        else:
+            x_aux, _ = jax.lax.scan(body, x_aux, params["groups"])
+    x, aux = x_aux
+    for j, spec in enumerate(cfg.tail):
+        x, aux, _ = _apply_block(cfg, spec, params["tail"][j], x, aux)
+
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_b"))
+
+    if not cfg.lm_head:
+        if cfg.n_classes:
+            return x @ params["cls_head"], aux
+        return x, aux
+
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    logits = AS.constrain(logits, "logits")
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = jnp.tanh(logits.astype(jnp.float32) / c) * c
+    return logits, aux
+
+
+# ----------------------------------------------------------------------
+# KV / state cache
+# ----------------------------------------------------------------------
+
+def _block_cache(cfg: LMConfig, spec: BlockSpec, batch: int, max_seq: int,
+                 dtype) -> Optional[Params]:
+    if spec.mixer == "attn":
+        shape = (batch, cfg.n_kv_heads, max_seq, cfg.hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if spec.mixer == "sliding":
+        s = min(max_seq, cfg.window or max_seq)
+        shape = (batch, cfg.n_kv_heads, s, cfg.hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if spec.mixer == "mla":
+        return {
+            "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, 1, max_seq, cfg.mla_rope_dim),
+                                dtype),
+        }
+    if spec.mixer == "mamba":
+        d_inner = cfg.mamba_expand * cfg.d_model
+        return {
+            "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, d_inner), dtype),
+            "ssm": jnp.zeros((batch, d_inner, cfg.mamba_d_state),
+                             jnp.float32),
+        }
+    if spec.mixer == "rwkv":
+        n_heads = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "wkv": jnp.zeros((batch, n_heads, cfg.rwkv_head_dim,
+                              cfg.rwkv_head_dim), jnp.float32),
+            "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+            "cm_shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        }
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    cache: Params = {}
+    if cfg.n_groups > 0:
+        def stack(tree_fn):
+            trees = [tree_fn() for _ in range(cfg.n_groups)]
+            return jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *trees)
+
+        cache["groups"] = [
+            stack(lambda spec=spec: _block_cache(cfg, spec, batch, max_seq,
+                                                 dtype))
+            for spec in cfg.pattern
+        ]
+    if cfg.tail:
+        cache["tail"] = [
+            _block_cache(cfg, spec, batch, max_seq, dtype)
+            for spec in cfg.tail
+        ]
+    return cache
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> Params:
+    return jax.eval_shape(partial(init_cache, cfg, batch, max_seq, dtype))
+
+
+# ----------------------------------------------------------------------
+# decode step (serving)
+# ----------------------------------------------------------------------
+
+def decode_step(cfg: LMConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray, pos) -> Tuple[jnp.ndarray, Params]:
+    """One serving step: ``tokens`` (B, 1) int32, ``pos`` scalar int32 (the
+    write position, == number of tokens already in cache).  Returns
+    (logits (B, 1, V), new_cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    aux = jnp.zeros((), jnp.float32)
+
+    new_cache: Params = {}
+    if cfg.n_groups > 0:
+        def group_body(carry, scanned):
+            x, aux = carry
+            gp, gc = scanned
+            new_gc = []
+            for j, spec in enumerate(cfg.pattern):
+                x, aux, nc = _apply_block(cfg, spec, gp[j], x, aux,
+                                          cache=gc[j], cache_pos=pos)
+                new_gc.append(nc)
+            return (x, aux), new_gc
+
+        if cfg.unroll_groups:
+            outs = []
+            carry = (x, aux)
+            for gi in range(cfg.n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[gi],
+                                            params["groups"])
+                gc = jax.tree_util.tree_map(lambda a: a[gi],
+                                            cache["groups"])
+                carry, nc = group_body(carry, (gp, gc))
+                outs.append(nc)
+            (x, aux) = carry
+            new_cache["groups"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            (x, aux), new_groups = jax.lax.scan(
+                group_body, (x, aux), (params["groups"], cache["groups"]))
+            new_cache["groups"] = new_groups
+    if cfg.tail:
+        new_cache["tail"] = []
+        for j, spec in enumerate(cfg.tail):
+            x, aux, nc = _apply_block(cfg, spec, params["tail"][j], x, aux,
+                                      cache=cache["tail"][j], cache_pos=pos)
+            new_cache["tail"].append(nc)
+
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_b"))
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = jnp.tanh(logits.astype(jnp.float32) / c) * c
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------------
+# losses / steps (pure; launch.train wires them into pjit)
+# ----------------------------------------------------------------------
+
+def lm_loss(cfg: LMConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            z_loss: float = 1e-4) -> jnp.ndarray:
+    logits, aux = forward(cfg, params,
+                          tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    # vocab-sharded-safe CE: reductions over the (possibly model-sharded)
+    # vocab axis partition cleanly; no take_along_axis gather.
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = (labels[..., None] ==
+              jnp.arange(logits.shape[-1], dtype=labels.dtype))
+    picked = jnp.sum(shifted * onehot, axis=-1) + m[..., 0]
+    nll = logz - picked
+    mask = batch.get("mask")
+    if mask is None:
+        loss = nll.mean()
+        zl = jnp.square(logz).mean()
+    else:
+        denom = jnp.maximum(mask.sum(), 1)
+        loss = (nll * mask).sum() / denom
+        zl = (jnp.square(logz) * mask).sum() / denom
+    return loss + z_loss * zl + aux

@@ -1,0 +1,36 @@
+"""repro.nn — torch.nn-shaped neural network API."""
+
+from . import functional
+from .layers import (
+    GELU,
+    SiLU,
+    AdaptiveAvgPool2d,
+    AvgPool2d,
+    BatchNorm2d,
+    Conv1d,
+    Conv2d,
+    Dropout,
+    Embedding,
+    Flatten,
+    Hardswish,
+    Identity,
+    LayerNorm,
+    Linear,
+    MaxPool2d,
+    ReLU,
+    ReLU6,
+    RMSNorm,
+    Sigmoid,
+    Softmax,
+    Tanh,
+)
+from .module import (
+    Module,
+    ModuleDict,
+    ModuleList,
+    Parameter,
+    Sequential,
+    functional_call,
+    param_dict,
+)
+from .rnn import LSTM, LSTMCell

@@ -1,0 +1,445 @@
+"""nn.functional — stateless ops over Tensors.
+
+Every op here is implemented as a *jnp-level* function and routed through
+the eager dispatcher as a single tape node (its backward is the exact
+``jax.vjp`` of the fused computation).  This mirrors how PyTorch backs
+``F.*`` with single fused ATen kernels rather than building them out of
+primitive tape nodes — and it keeps eager dispatch overhead at one node per
+layer-level op.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.tensor import Tensor, _apply_op, _coerce, _raw
+
+# ----------------------------------------------------------------------
+# activations
+# ----------------------------------------------------------------------
+
+def relu(x: Tensor) -> Tensor:
+    return _apply_op("relu", jax.nn.relu, _coerce(x))
+
+
+def relu6(x: Tensor) -> Tensor:
+    return _apply_op("relu6", jax.nn.relu6, _coerce(x))
+
+
+def gelu(x: Tensor, approximate: str = "tanh") -> Tensor:
+    return _apply_op(
+        "gelu",
+        lambda v: jax.nn.gelu(v, approximate=(approximate == "tanh")),
+        _coerce(x))
+
+
+def silu(x: Tensor) -> Tensor:
+    return _apply_op("silu", jax.nn.silu, _coerce(x))
+
+
+def sigmoid(x: Tensor) -> Tensor:
+    return _apply_op("sigmoid", jax.nn.sigmoid, _coerce(x))
+
+
+def tanh(x: Tensor) -> Tensor:
+    return _apply_op("tanh", jnp.tanh, _coerce(x))
+
+
+def softmax(x: Tensor, dim: int = -1) -> Tensor:
+    return _apply_op("softmax", lambda v: jax.nn.softmax(v, axis=dim),
+                     _coerce(x))
+
+
+def log_softmax(x: Tensor, dim: int = -1) -> Tensor:
+    return _apply_op("log_softmax",
+                     lambda v: jax.nn.log_softmax(v, axis=dim), _coerce(x))
+
+
+def leaky_relu(x: Tensor, negative_slope: float = 0.01) -> Tensor:
+    return _apply_op(
+        "leaky_relu",
+        lambda v: jax.nn.leaky_relu(v, negative_slope), _coerce(x))
+
+
+def elu(x: Tensor, alpha: float = 1.0) -> Tensor:
+    return _apply_op("elu", lambda v: jax.nn.elu(v, alpha), _coerce(x))
+
+
+def softplus(x: Tensor) -> Tensor:
+    return _apply_op("softplus", jax.nn.softplus, _coerce(x))
+
+
+def hardswish(x: Tensor) -> Tensor:
+    return _apply_op("hardswish", jax.nn.hard_swish, _coerce(x))
+
+
+# ----------------------------------------------------------------------
+# linear / embedding
+# ----------------------------------------------------------------------
+
+def linear(x: Tensor, weight: Tensor, bias: Optional[Tensor] = None) -> Tensor:
+    """y = x @ W^T + b  (torch layout: weight is (out, in))."""
+    x, weight = _coerce(x), _coerce(weight)
+    if bias is None:
+        return _apply_op("linear", lambda v, w: v @ w.T, x, weight)
+    return _apply_op("linear",
+                     lambda v, w, b: v @ w.T + b, x, weight, _coerce(bias))
+
+
+def embedding(indices: Tensor, weight: Tensor) -> Tensor:
+    idx = _raw(indices)
+    return _apply_op("embedding", lambda w: jnp.take(w, idx, axis=0),
+                     _coerce(weight))
+
+
+# ----------------------------------------------------------------------
+# normalization
+# ----------------------------------------------------------------------
+
+def layer_norm(x: Tensor, normalized_shape: Sequence[int],
+               weight: Optional[Tensor] = None,
+               bias: Optional[Tensor] = None, eps: float = 1e-5) -> Tensor:
+    axes = tuple(range(-len(tuple(normalized_shape)), 0))
+
+    def _ln(v, *wb):
+        mean = jnp.mean(v, axis=axes, keepdims=True)
+        var = jnp.var(v, axis=axes, keepdims=True)
+        out = (v - mean) * jax.lax.rsqrt(var + eps)
+        if wb:
+            out = out * wb[0]
+            if len(wb) > 1:
+                out = out + wb[1]
+        return out
+
+    args = [_coerce(x)]
+    if weight is not None:
+        args.append(_coerce(weight))
+        if bias is not None:
+            args.append(_coerce(bias))
+    return _apply_op("layer_norm", _ln, *args)
+
+
+def rms_norm(x: Tensor, weight: Optional[Tensor] = None,
+             eps: float = 1e-6, offset: float = 0.0) -> Tensor:
+    """RMSNorm; ``offset=1.0`` gives the Gemma convention (1+w scaling)."""
+
+    def _rms(v, *w):
+        var = jnp.mean(jnp.square(v.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        out = v * jax.lax.rsqrt(var + eps).astype(v.dtype)
+        if w:
+            out = out * (offset + w[0])
+        return out
+
+    args = [_coerce(x)]
+    if weight is not None:
+        args.append(_coerce(weight))
+    return _apply_op("rms_norm", _rms, *args)
+
+
+def batch_norm(x: Tensor, running_mean, running_var,
+               weight: Optional[Tensor] = None,
+               bias: Optional[Tensor] = None, training: bool = False,
+               momentum: float = 0.1, eps: float = 1e-5) -> Tensor:
+    """2d batch norm over NCHW.  In training mode, running stats are
+    updated in place on the buffer tensors (imperative semantics)."""
+    x = _coerce(x)
+    reduce_axes = (0,) + tuple(range(2, x.ndim))
+    shape = (1, x.shape[1]) + (1,) * (x.ndim - 2)
+
+    if training:
+        batch_mean = jnp.mean(x.data, axis=reduce_axes)
+        batch_var = jnp.var(x.data, axis=reduce_axes)
+        if running_mean is not None and not isinstance(
+                x.data, jax.core.Tracer):
+            running_mean._data = ((1 - momentum) * running_mean.data
+                                  + momentum * batch_mean)
+            running_var._data = ((1 - momentum) * running_var.data
+                                 + momentum * batch_var)
+            running_mean._version.bump()
+            running_var._version.bump()
+
+        def _bn(v, *wb):
+            m = jnp.mean(v, axis=reduce_axes).reshape(shape)
+            var = jnp.var(v, axis=reduce_axes).reshape(shape)
+            out = (v - m) * jax.lax.rsqrt(var + eps)
+            if wb:
+                out = out * wb[0].reshape(shape)
+                if len(wb) > 1:
+                    out = out + wb[1].reshape(shape)
+            return out
+    else:
+        m = _raw(running_mean).reshape(shape)
+        var = _raw(running_var).reshape(shape)
+
+        def _bn(v, *wb):
+            out = (v - m) * jax.lax.rsqrt(var + eps)
+            if wb:
+                out = out * wb[0].reshape(shape)
+                if len(wb) > 1:
+                    out = out + wb[1].reshape(shape)
+            return out
+
+    args = [x]
+    if weight is not None:
+        args.append(_coerce(weight))
+        if bias is not None:
+            args.append(_coerce(bias))
+    return _apply_op("batch_norm", _bn, *args)
+
+
+# ----------------------------------------------------------------------
+# convolution / pooling (NCHW, torch layout)
+# ----------------------------------------------------------------------
+
+def _pair(v) -> Tuple[int, int]:
+    return (v, v) if isinstance(v, int) else tuple(v)
+
+
+def conv2d(x: Tensor, weight: Tensor, bias: Optional[Tensor] = None,
+           stride: Union[int, Tuple[int, int]] = 1,
+           padding: Union[int, Tuple[int, int], str] = 0,
+           dilation: Union[int, Tuple[int, int]] = 1,
+           groups: int = 1) -> Tensor:
+    stride = _pair(stride)
+    dilation = _pair(dilation)
+    if isinstance(padding, str):
+        pad = padding.upper()
+    else:
+        p = _pair(padding)
+        pad = ((p[0], p[0]), (p[1], p[1]))
+
+    def _conv(v, w, *b):
+        out = jax.lax.conv_general_dilated(
+            v, w, window_strides=stride, padding=pad,
+            rhs_dilation=dilation, feature_group_count=groups,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        if b:
+            out = out + b[0].reshape(1, -1, 1, 1)
+        return out
+
+    args = [_coerce(x), _coerce(weight)]
+    if bias is not None:
+        args.append(_coerce(bias))
+    return _apply_op("conv2d", _conv, *args)
+
+
+def conv1d(x: Tensor, weight: Tensor, bias: Optional[Tensor] = None,
+           stride: int = 1, padding: int = 0, dilation: int = 1,
+           groups: int = 1) -> Tensor:
+    def _conv(v, w, *b):
+        out = jax.lax.conv_general_dilated(
+            v, w, window_strides=(stride,), padding=((padding, padding),),
+            rhs_dilation=(dilation,), feature_group_count=groups,
+            dimension_numbers=("NCH", "OIH", "NCH"))
+        if b:
+            out = out + b[0].reshape(1, -1, 1)
+        return out
+
+    args = [_coerce(x), _coerce(weight)]
+    if bias is not None:
+        args.append(_coerce(bias))
+    return _apply_op("conv1d", _conv, *args)
+
+
+def max_pool2d(x: Tensor, kernel_size, stride=None, padding=0) -> Tensor:
+    k = _pair(kernel_size)
+    s = _pair(stride if stride is not None else kernel_size)
+    p = _pair(padding)
+
+    def _pool(v):
+        return jax.lax.reduce_window(
+            v, -jnp.inf, jax.lax.max,
+            window_dimensions=(1, 1) + k,
+            window_strides=(1, 1) + s,
+            padding=((0, 0), (0, 0), (p[0], p[0]), (p[1], p[1])))
+
+    return _apply_op("max_pool2d", _pool, _coerce(x))
+
+
+def avg_pool2d(x: Tensor, kernel_size, stride=None, padding=0) -> Tensor:
+    k = _pair(kernel_size)
+    s = _pair(stride if stride is not None else kernel_size)
+    p = _pair(padding)
+
+    def _pool(v):
+        summed = jax.lax.reduce_window(
+            v, 0.0, jax.lax.add,
+            window_dimensions=(1, 1) + k,
+            window_strides=(1, 1) + s,
+            padding=((0, 0), (0, 0), (p[0], p[0]), (p[1], p[1])))
+        return summed / (k[0] * k[1])
+
+    return _apply_op("avg_pool2d", _pool, _coerce(x))
+
+
+def adaptive_avg_pool2d(x: Tensor, output_size) -> Tensor:
+    out = _pair(output_size)
+
+    def _pool(v):
+        n, c, h, w = v.shape
+        if h >= out[0] and w >= out[1] and h % out[0] == 0 \
+                and w % out[1] == 0:
+            kh, kw = h // out[0], w // out[1]
+            v = v.reshape(n, c, out[0], kh, out[1], kw)
+            return v.mean(axis=(3, 5))
+        # non-divisible / upscale fallback: interpolate (benchmark-size
+        # flexibility; torch uses overlapping windows here)
+        return jax.image.resize(v, (n, c, out[0], out[1]), method="linear")
+
+    return _apply_op("adaptive_avg_pool2d", _pool, _coerce(x))
+
+
+# ----------------------------------------------------------------------
+# dropout
+# ----------------------------------------------------------------------
+
+_dropout_seed = np.random.default_rng(1234)
+
+
+def dropout(x: Tensor, p: float = 0.5, training: bool = True,
+            rng: Optional[jax.Array] = None) -> Tensor:
+    if not training or p == 0.0:
+        return _coerce(x)
+    x = _coerce(x)
+    if rng is None:
+        if isinstance(x.data, jax.core.Tracer):
+            raise RuntimeError(
+                "dropout under jit requires an explicit `rng` key "
+                "(pass rng=jax.random.key(...)); eager mode draws from the "
+                "global generator.")
+        mask = jnp.asarray(
+            _dropout_seed.random(x.shape) >= p, dtype=x.dtype)
+    else:
+        mask = jax.random.bernoulli(rng, 1.0 - p, x.shape).astype(x.dtype)
+    scale = 1.0 / (1.0 - p)
+    return _apply_op("dropout", lambda v, m: v * m * scale, x, Tensor(mask))
+
+
+# ----------------------------------------------------------------------
+# losses
+# ----------------------------------------------------------------------
+
+def cross_entropy(logits: Tensor, target: Tensor,
+                  ignore_index: int = -100,
+                  label_smoothing: float = 0.0,
+                  reduction: str = "mean") -> Tensor:
+    """Softmax cross-entropy with integer targets (torch semantics)."""
+    tgt = _raw(target)
+
+    def _ce(lg):
+        lg32 = lg.astype(jnp.float32)
+        logp = jax.nn.log_softmax(lg32, axis=-1)
+        n_cls = lg.shape[-1]
+        flat_logp = logp.reshape(-1, n_cls)
+        flat_tgt = tgt.reshape(-1)
+        valid = flat_tgt != ignore_index
+        safe_tgt = jnp.where(valid, flat_tgt, 0)
+        picked = jnp.take_along_axis(
+            flat_logp, safe_tgt[:, None], axis=-1)[:, 0]
+        if label_smoothing > 0.0:
+            smooth = jnp.mean(flat_logp, axis=-1)
+            picked = (1 - label_smoothing) * picked + label_smoothing * smooth
+        loss = -jnp.where(valid, picked, 0.0)
+        if reduction == "mean":
+            return loss.sum() / jnp.maximum(valid.sum(), 1)
+        if reduction == "sum":
+            return loss.sum()
+        return loss.reshape(tgt.shape)
+
+    return _apply_op("cross_entropy", _ce, _coerce(logits))
+
+
+def nll_loss(log_probs: Tensor, target: Tensor,
+             reduction: str = "mean") -> Tensor:
+    tgt = _raw(target)
+
+    def _nll(lp):
+        picked = jnp.take_along_axis(
+            lp.reshape(-1, lp.shape[-1]),
+            tgt.reshape(-1)[:, None], axis=-1)[:, 0]
+        loss = -picked
+        if reduction == "mean":
+            return loss.mean()
+        if reduction == "sum":
+            return loss.sum()
+        return loss.reshape(tgt.shape)
+
+    return _apply_op("nll_loss", _nll, _coerce(log_probs))
+
+
+def mse_loss(input: Tensor, target: Tensor, reduction: str = "mean") -> Tensor:
+    def _mse(a, b):
+        d = jnp.square(a - b)
+        if reduction == "mean":
+            return d.mean()
+        if reduction == "sum":
+            return d.sum()
+        return d
+
+    return _apply_op("mse_loss", _mse, _coerce(input), _coerce(target))
+
+
+def binary_cross_entropy_with_logits(input: Tensor, target: Tensor,
+                                     reduction: str = "mean") -> Tensor:
+    def _bce(lg, t):
+        loss = jnp.maximum(lg, 0) - lg * t + jnp.log1p(jnp.exp(-jnp.abs(lg)))
+        if reduction == "mean":
+            return loss.mean()
+        if reduction == "sum":
+            return loss.sum()
+        return loss
+
+    return _apply_op("bce_logits", _bce, _coerce(input), _coerce(target))
+
+
+# ----------------------------------------------------------------------
+# attention (reference path; the Pallas flash kernel plugs in via
+# repro.kernels and is selected by backend="pallas")
+# ----------------------------------------------------------------------
+
+def scaled_dot_product_attention(q: Tensor, k: Tensor, v: Tensor,
+                                 attn_mask: Optional[Tensor] = None,
+                                 is_causal: bool = False,
+                                 scale: Optional[float] = None,
+                                 window: Optional[int] = None,
+                                 backend: str = "auto") -> Tensor:
+    """(B, H, S, D) attention with GQA broadcast, causal & sliding-window
+    masking.  ``backend='pallas'`` routes to the flash kernel."""
+    from ..models import attention as _attn
+
+    mask = _raw(attn_mask) if attn_mask is not None else None
+    fn = partial(_attn.sdpa, is_causal=is_causal, scale=scale,
+                 window=window, mask=mask, backend=backend)
+    return _apply_op("sdpa", fn, _coerce(q), _coerce(k), _coerce(v))
+
+
+# handy aliases matching torch.nn.functional
+def pad(x: Tensor, padding: Sequence[int], value: float = 0.0) -> Tensor:
+    """torch-style pad: last-dim-first pairs."""
+    x = _coerce(x)
+    pads = [(0, 0)] * x.ndim
+    for i in range(len(padding) // 2):
+        dim = x.ndim - 1 - i
+        pads[dim] = (padding[2 * i], padding[2 * i + 1])
+    return _apply_op("pad",
+                     lambda v: jnp.pad(v, pads, constant_values=value), x)
+
+
+def one_hot(x: Tensor, num_classes: int) -> Tensor:
+    return Tensor(jax.nn.one_hot(_raw(x), num_classes))
+
+
+def normalize(x: Tensor, p: float = 2.0, dim: int = -1,
+              eps: float = 1e-12) -> Tensor:
+    def _norm(v):
+        n = jnp.linalg.norm(v, ord=p, axis=dim, keepdims=True)
+        return v / jnp.maximum(n, eps)
+
+    return _apply_op("normalize", _norm, _coerce(x))

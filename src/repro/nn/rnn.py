@@ -1,0 +1,138 @@
+"""Recurrent layers (LSTM/GRU) — needed for the paper's GNMTv2 benchmark.
+
+The recurrence runs as a single ``jax.lax.scan`` inside one tape node, so
+eager dispatch cost is O(1) per layer per step-batch rather than O(seq).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import tensor_mod as T
+from ..core.tensor import Tensor, _apply_op, _coerce
+from .module import Module, Parameter
+
+
+def _lstm_cell(x_t, h, c, w_ih, w_hh, b):
+    gates = x_t @ w_ih.T + h @ w_hh.T + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+class LSTM(Module):
+    """Multi-layer LSTM over (B, S, D) batches (batch_first semantics)."""
+
+    def __init__(self, input_size: int, hidden_size: int,
+                 num_layers: int = 1, bias: bool = True,
+                 bidirectional: bool = False, dtype=jnp.float32):
+        super().__init__()
+        self.input_size = input_size
+        self.hidden_size = hidden_size
+        self.num_layers = num_layers
+        self.bidirectional = bidirectional
+        dirs = 2 if bidirectional else 1
+        k = 1.0 / math.sqrt(hidden_size)
+        for layer in range(num_layers):
+            for d in range(dirs):
+                in_sz = input_size if layer == 0 else hidden_size * dirs
+                sfx = f"_l{layer}" + ("_reverse" if d else "")
+                setattr(self, f"weight_ih{sfx}", Parameter(
+                    T.uniform(-k, k, (4 * hidden_size, in_sz), dtype=dtype)))
+                setattr(self, f"weight_hh{sfx}", Parameter(
+                    T.uniform(-k, k, (4 * hidden_size, hidden_size),
+                              dtype=dtype)))
+                setattr(self, f"bias{sfx}", Parameter(
+                    T.uniform(-k, k, (4 * hidden_size,), dtype=dtype)))
+
+    def _run_direction(self, x: Tensor, w_ih: Tensor, w_hh: Tensor,
+                       b: Tensor, reverse: bool,
+                       h0c0=None) -> Tuple[Tensor, Tensor, Tensor]:
+        hidden = self.hidden_size
+
+        def _scan(xd, wi, wh, bb, *hc):
+            bsz = xd.shape[0]
+            if hc:
+                h0, c0 = hc
+            else:
+                h0 = jnp.zeros((bsz, hidden), xd.dtype)
+                c0 = jnp.zeros((bsz, hidden), xd.dtype)
+            seq = jnp.swapaxes(xd, 0, 1)  # (S, B, D)
+            if reverse:
+                seq = seq[::-1]
+
+            def step(carry, x_t):
+                h, c = carry
+                h, c = _lstm_cell(x_t, h, c, wi, wh, bb)
+                return (h, c), h
+
+            (h_n, c_n), outs = jax.lax.scan(step, (h0, c0), seq)
+            if reverse:
+                outs = outs[::-1]
+            return jnp.swapaxes(outs, 0, 1), h_n, c_n
+
+        args = [x, w_ih, w_hh, b]
+        if h0c0 is not None:
+            args += [h0c0[0], h0c0[1]]
+        return _apply_op("lstm", _scan, *[_coerce(a) for a in args],
+                         num_outputs=3)
+
+    def forward(self, x: Tensor, state=None):
+        h_states, c_states = [], []
+        out = x
+        for layer in range(self.num_layers):
+            sfx = f"_l{layer}"
+            h0c0 = None
+            if state is not None:
+                h0c0 = (state[0][layer], state[1][layer])
+            fwd, h_n, c_n = self._run_direction(
+                out, getattr(self, f"weight_ih{sfx}"),
+                getattr(self, f"weight_hh{sfx}"),
+                getattr(self, f"bias{sfx}"), reverse=False, h0c0=h0c0)
+            if self.bidirectional:
+                bwd, hb, cb = self._run_direction(
+                    out, getattr(self, f"weight_ih{sfx}_reverse"),
+                    getattr(self, f"weight_hh{sfx}_reverse"),
+                    getattr(self, f"bias{sfx}_reverse"), reverse=True)
+                out = T.cat([fwd, bwd], dim=-1)
+                h_states += [h_n, hb]
+                c_states += [c_n, cb]
+            else:
+                out = fwd
+                h_states.append(h_n)
+                c_states.append(c_n)
+        h = T.stack(h_states, dim=0)
+        c = T.stack(c_states, dim=0)
+        return out, (h, c)
+
+
+class LSTMCell(Module):
+    def __init__(self, input_size: int, hidden_size: int, dtype=jnp.float32):
+        super().__init__()
+        self.hidden_size = hidden_size
+        k = 1.0 / math.sqrt(hidden_size)
+        self.weight_ih = Parameter(
+            T.uniform(-k, k, (4 * hidden_size, input_size), dtype=dtype))
+        self.weight_hh = Parameter(
+            T.uniform(-k, k, (4 * hidden_size, hidden_size), dtype=dtype))
+        self.bias = Parameter(T.uniform(-k, k, (4 * hidden_size,),
+                                        dtype=dtype))
+
+    def forward(self, x: Tensor, state=None):
+        if state is None:
+            z = T.zeros(x.shape[0], self.hidden_size, dtype=x.dtype)
+            state = (z, z)
+        h, c = state
+        out = _apply_op(
+            "lstm_cell",
+            lambda xd, hd, cd, wi, wh, b: _lstm_cell(xd, hd, cd, wi, wh, b),
+            _coerce(x), _coerce(h), _coerce(c),
+            self.weight_ih, self.weight_hh, self.bias, num_outputs=2)
+        return out

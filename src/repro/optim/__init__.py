@@ -1,0 +1,141 @@
+"""repro.optim — torch.optim-shaped optimizers.
+
+"Running optimizers [is] expressed using the familiar concepts developed
+for general purpose programming" (paper §4.1): an Optimizer is a plain
+object holding references to parameters; ``step()`` mutates them in place
+under ``no_grad``.  The math lives in ``repro.optim.functional`` and is
+shared with the compiled/distributed train step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.autograd import no_grad
+from ..core.tensor import Tensor
+from . import functional as OF
+from .functional import (
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+)
+
+
+class Optimizer:
+    """Base optimizer with param groups, mirroring torch.optim.Optimizer."""
+
+    def __init__(self, params, defaults: Dict[str, Any], algo: str):
+        self.defaults = defaults
+        self.algo = algo
+        params = list(params)
+        if not params:
+            raise ValueError("optimizer got an empty parameter list")
+        if isinstance(params[0], dict):
+            self.param_groups = [dict(defaults, **g) for g in params]
+        else:
+            self.param_groups = [dict(defaults, params=params)]
+        self.state: Dict[int, Dict[str, Any]] = {}
+        init, self._update = OF.OPTIMIZERS[algo]
+        self._init = init
+
+    def zero_grad(self, set_to_none: bool = True) -> None:
+        for group in self.param_groups:
+            for p in group["params"]:
+                p.grad = None
+
+    @no_grad()
+    def step(self) -> None:
+        for group in self.param_groups:
+            hp = {k: v for k, v in group.items() if k != "params"}
+            for p in group["params"]:
+                if p.grad is None:
+                    continue
+                st = self.state.get(id(p))
+                if st is None:
+                    st = self._init(p.data, **hp)
+                g = p.grad.data
+                updates, new_state = self._update(g, st, p.data, **hp)
+                self.state[id(p)] = new_state
+                p._data = p.data + updates
+                p._version.bump()
+
+    def state_dict(self) -> Dict[str, Any]:
+        # index params positionally across groups for serialization
+        packed = []
+        idx = 0
+        for group in self.param_groups:
+            for p in group["params"]:
+                st = self.state.get(id(p))
+                packed.append(jax.tree_util.tree_map(
+                    lambda x: x, st) if st is not None else None)
+                idx += 1
+        return {"state": packed,
+                "param_groups": [
+                    {k: v for k, v in g.items() if k != "params"}
+                    for g in self.param_groups]}
+
+    def load_state_dict(self, sd: Dict[str, Any]) -> None:
+        packed = sd["state"]
+        idx = 0
+        for group in self.param_groups:
+            for p in group["params"]:
+                if idx < len(packed) and packed[idx] is not None:
+                    self.state[id(p)] = packed[idx]
+                idx += 1
+
+
+class SGD(Optimizer):
+    def __init__(self, params, lr: float = 1e-3, momentum: float = 0.0,
+                 weight_decay: float = 0.0, nesterov: bool = False,
+                 dampening: float = 0.0):
+        super().__init__(params, dict(lr=lr, momentum=momentum,
+                                      weight_decay=weight_decay,
+                                      nesterov=nesterov,
+                                      dampening=dampening), "sgd")
+
+
+class Adam(Optimizer):
+    def __init__(self, params, lr: float = 1e-3, betas=(0.9, 0.999),
+                 eps: float = 1e-8, weight_decay: float = 0.0):
+        super().__init__(params, dict(lr=lr, betas=betas, eps=eps,
+                                      weight_decay=weight_decay,
+                                      decoupled=False), "adam")
+
+
+class AdamW(Optimizer):
+    def __init__(self, params, lr: float = 1e-3, betas=(0.9, 0.999),
+                 eps: float = 1e-8, weight_decay: float = 0.01,
+                 state_dtype=None):
+        super().__init__(params, dict(lr=lr, betas=betas, eps=eps,
+                                      weight_decay=weight_decay,
+                                      decoupled=True,
+                                      state_dtype=state_dtype), "adamw")
+
+
+class Adafactor(Optimizer):
+    def __init__(self, params, lr: float = 1e-2, decay: float = 0.8,
+                 clip_threshold: float = 1.0, weight_decay: float = 0.0):
+        super().__init__(params, dict(lr=lr, decay=decay,
+                                      clip_threshold=clip_threshold,
+                                      weight_decay=weight_decay),
+                         "adafactor")
+
+
+# -- LR schedules (functional, used by launch.train) ---------------------
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1) -> Callable[[Any], Any]:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        progress = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        progress = jnp.clip(progress, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+    return f

@@ -1,0 +1,208 @@
+"""Functional optimizer cores: pure ``init(params) -> state`` and
+``update(grads, state, params) -> (updates, state)`` pairs over pytrees.
+
+These are the single source of truth for the update math.  The eager
+``repro.optim.Optimizer`` classes call them per-parameter; the distributed
+train step ``pjit``s them over the whole sharded param pytree (optimizer
+state inherits the parameter sharding → ZeRO-style state partitioning for
+free).
+
+``state_dtype`` lets the giant-MoE configs (arctic-480b, jamba-398b) hold
+moments in bf16; ``factored=True`` switches the second moment to Adafactor
+row/column factorization — both standard large-scale memory tricks.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# ----------------------------------------------------------------------
+# SGD
+# ----------------------------------------------------------------------
+
+def sgd_init(params, momentum: float = 0.0, **_):
+    if momentum == 0.0:
+        return {}
+    return {"momentum": tree_map(jnp.zeros_like, params)}
+
+
+def sgd_update(grads, state, params, *, lr: float, momentum: float = 0.0,
+               weight_decay: float = 0.0, nesterov: bool = False,
+               dampening: float = 0.0, **_):
+    if weight_decay:
+        grads = tree_map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum:
+        buf = tree_map(
+            lambda m, g: momentum * m + (1 - dampening) * g,
+            state["momentum"], grads)
+        if nesterov:
+            grads = tree_map(lambda g, m: g + momentum * m, grads, buf)
+        else:
+            grads = buf
+        state = {"momentum": buf}
+    updates = tree_map(lambda g: -lr * g, grads)
+    return updates, state
+
+
+# ----------------------------------------------------------------------
+# Adam / AdamW
+# ----------------------------------------------------------------------
+
+def adam_init(params, state_dtype=None, **_):
+    def z(p):
+        dt = state_dtype or p.dtype
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "m": tree_map(z, params),
+        "v": tree_map(z, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(grads, state, params, *, lr: float, betas=(0.9, 0.999),
+                eps: float = 1e-8, weight_decay: float = 0.0,
+                decoupled: bool = True, state_dtype=None, **_):
+    b1, b2 = betas
+    step = state["step"] + 1
+    stepf = step.astype(jnp.float32)
+
+    if weight_decay and not decoupled:  # classic Adam (L2 into grad)
+        grads = tree_map(lambda g, p: g + weight_decay * p, grads, params)
+
+    def upd_m(m, g):
+        return (b1 * m.astype(g.dtype) + (1 - b1) * g).astype(m.dtype)
+
+    def upd_v(v, g):
+        g32 = g.astype(jnp.float32)
+        return (b2 * v.astype(jnp.float32)
+                + (1 - b2) * jnp.square(g32)).astype(v.dtype)
+
+    m = tree_map(upd_m, state["m"], grads)
+    v = tree_map(upd_v, state["v"], grads)
+    bc1 = 1 - b1 ** stepf
+    bc2 = 1 - b2 ** stepf
+
+    def upd(p, mm, vv):
+        mhat = mm.astype(jnp.float32) / bc1
+        vhat = vv.astype(jnp.float32) / bc2
+        u = -lr * mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and decoupled:  # AdamW
+            u = u - lr * weight_decay * p.astype(jnp.float32)
+        return u.astype(p.dtype)
+
+    updates = tree_map(upd, params, m, v)
+    return updates, {"m": m, "v": v, "step": step}
+
+
+# ----------------------------------------------------------------------
+# Adafactor (factored second moment — fits 480B optimizer state)
+# ----------------------------------------------------------------------
+
+def adafactor_init(params, **_):
+    def fac(p):
+        if p.ndim >= 2:
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"row": row, "col": col}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "fac": tree_map(fac, params,
+                        ),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, *, lr: float,
+                     decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0, **_):
+    step = state["step"] + 1
+    stepf = step.astype(jnp.float32)
+    beta2 = 1.0 - stepf ** (-decay)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_f = treedef.flatten_up_to(state["fac"])
+
+    new_fac, updates = [], []
+    for g, p, f in zip(flat_g, flat_p, flat_f):
+        g32 = g.astype(jnp.float32)
+        sq = jnp.square(g32) + eps
+        if g.ndim >= 2:
+            row = beta2 * f["row"] + (1 - beta2) * sq.mean(axis=-1)
+            col = beta2 * f["col"] + (1 - beta2) * sq.mean(axis=-2)
+            row_mean = row.mean(axis=-1, keepdims=True)
+            vhat = (row[..., :, None] / jnp.maximum(row_mean[..., None], eps)
+                    ) * col[..., None, :]
+            new_fac.append({"row": row, "col": col})
+        else:
+            v = beta2 * f["v"] + (1 - beta2) * sq
+            vhat = v
+            new_fac.append({"v": v})
+        u = g32 / jnp.sqrt(jnp.maximum(vhat, eps))
+        # update clipping (Adafactor's RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        u = -lr * u
+        if weight_decay:
+            u = u - lr * weight_decay * p.astype(jnp.float32)
+        updates.append(u.astype(p.dtype))
+
+    return (jax.tree_util.tree_unflatten(treedef, updates),
+            {"fac": jax.tree_util.tree_unflatten(treedef, new_fac),
+             "step": step})
+
+
+# ----------------------------------------------------------------------
+# registry + helpers
+# ----------------------------------------------------------------------
+
+OPTIMIZERS: Dict[str, Tuple[Callable, Callable]] = {
+    "sgd": (sgd_init, sgd_update),
+    "adam": (adam_init, adam_update),
+    "adamw": (adam_init, adam_update),
+    "adafactor": (adafactor_init, adafactor_update),
+}
+
+
+def make_optimizer(name: str, **hparams):
+    """Returns (init_fn(params)->state, update_fn(grads, state, params)
+    -> (new_params, new_state)) with hyperparameters bound."""
+    init, update = OPTIMIZERS[name]
+    if name == "adamw":
+        hparams.setdefault("decoupled", True)
+        hparams.setdefault("weight_decay", 0.01)
+    if name == "adam":
+        hparams.setdefault("decoupled", False)
+
+    def init_fn(params):
+        return init(params, **hparams)
+
+    def update_fn(grads, state, params):
+        updates, new_state = update(grads, state, params, **hparams)
+        new_params = tree_map(lambda p, u: p + u, params, updates)
+        return new_params, new_state
+
+    return init_fn, update_fn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
+    return tree_map(lambda g: g * scale, tree), norm

@@ -1,0 +1,234 @@
+"""Paged KV-cache allocator — the §5.3 caching allocator reborn for TPU
+serving.
+
+PyTorch's insight: dynamic allocation against the raw device API is the
+bottleneck, so cache and reuse blocks, round sizes, and keep one pool per
+stream.  On TPU under XLA, *training* memory is compiler-planned, but
+*serving* reintroduces exactly the same dynamic-allocation problem: KV
+grows token by token, requests arrive/finish continuously.  The same
+design transplanted:
+
+  * fixed-size PAGES (the 512-byte rounding, at tokens granularity),
+  * a free-list that never returns pages to the system (incremental cache),
+  * refcounting for immediate reuse (§5.5) — shared prefixes hold
+    refcounts per page; copy-on-write on divergence,
+  * hash-based prefix reuse (the "cache hit" of Fig. 2, at page level).
+
+Physical layout: one (num_pages, page_size, n_kv_heads, head_dim) array
+pair per attention layer; block tables are host-side Python (control
+plane) while gathers/scatters are jnp (data plane) — the paper's
+control/data-flow separation (§5.2).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PageStats:
+    allocated_pages: int = 0
+    freed_pages: int = 0
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    cow_copies: int = 0
+    oom_rejections: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / tot if tot else 0.0
+
+
+class PagePool:
+    """Refcounted free-list of physical page ids (one pool; per-stream
+    pools degenerate to one on a single serving stream)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.refs: Dict[int, int] = {}
+        self.stats = PageStats()
+
+    def alloc(self) -> Optional[int]:
+        if not self.free:
+            self.stats.oom_rejections += 1
+            return None
+        page = self.free.pop()
+        self.refs[page] = 1
+        self.stats.allocated_pages += 1
+        return page
+
+    def retain(self, page: int) -> None:
+        self.refs[page] += 1
+
+    def release(self, page: int) -> None:
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            del self.refs[page]
+            self.free.append(page)       # immediate reuse — no deferred GC
+            self.stats.freed_pages += 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+
+class PagedKVCache:
+    """Physical paged KV storage + per-sequence block tables."""
+
+    def __init__(self, *, n_layers: int, n_kv_heads: int, head_dim: int,
+                 page_size: int = 16, num_pages: int = 256,
+                 dtype=jnp.bfloat16):
+        self.n_layers = n_layers
+        self.n_kv_heads = n_kv_heads
+        self.head_dim = head_dim
+        self.page_size = page_size
+        self.pool = PagePool(num_pages)
+        shape = (num_pages, page_size, n_kv_heads, head_dim)
+        self.k = [jnp.zeros(shape, dtype) for _ in range(n_layers)]
+        self.v = [jnp.zeros(shape, dtype) for _ in range(n_layers)]
+        # sequence id -> (block_table, length)
+        self.tables: Dict[int, List[int]] = {}
+        self.lengths: Dict[int, int] = {}
+        self.reused_prefix: Dict[int, int] = {}   # tokens whose pages were
+                                                  # prefix-cache hits
+        # prefix cache: page-content hash chain -> page id
+        self._prefix_index: Dict[bytes, int] = {}
+
+    # -- sequence lifecycle ----------------------------------------------
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pool.num_free >= self.pages_needed(n_tokens)
+
+    def create(self, seq_id: int, prompt_tokens: Sequence[int]) -> bool:
+        """Admit a sequence; reuse shared-prefix pages where the page-
+        aligned prompt hash matches (RadixAttention-style, page granular).
+        Returns False when out of pages (admission control)."""
+        assert seq_id not in self.tables
+        n = len(prompt_tokens)
+        table: List[int] = []
+        reused = 0
+        h = hashlib.sha1()
+        for start in range(0, n, self.page_size):
+            chunk = tuple(prompt_tokens[start:start + self.page_size])
+            full_page = len(chunk) == self.page_size
+            h.update(repr(chunk).encode())
+            key = h.digest()
+            hit = self._prefix_index.get(key) if full_page else None
+            if hit is not None and hit in self.pool.refs:
+                self.pool.retain(hit)
+                table.append(hit)
+                reused += 1
+                self.pool.stats.prefix_hits += 1
+                continue
+            page = self.pool.alloc()
+            if page is None:
+                for p in table:
+                    self.pool.release(p)
+                return False
+            self.pool.stats.prefix_misses += 1
+            if full_page:
+                self._prefix_index[key] = page
+            table.append(page)
+        self.tables[seq_id] = table
+        self.lengths[seq_id] = n
+        self.reused_prefix[seq_id] = reused * self.page_size
+        return True
+
+    def free_seq(self, seq_id: int) -> None:
+        for p in self.tables.pop(seq_id):
+            self.pool.release(p)
+        del self.lengths[seq_id]
+        self.reused_prefix.pop(seq_id, None)
+
+    def _writable_page(self, seq_id: int, page_pos: int) -> Optional[int]:
+        """Copy-on-write: if the page is shared, copy it before writing."""
+        table = self.tables[seq_id]
+        page = table[page_pos]
+        if self.pool.refs.get(page, 1) > 1:
+            new_page = self.pool.alloc()
+            if new_page is None:
+                return None
+            for layer in range(self.n_layers):
+                self.k[layer] = self.k[layer].at[new_page].set(
+                    self.k[layer][page])
+                self.v[layer] = self.v[layer].at[new_page].set(
+                    self.v[layer][page])
+            self.pool.release(page)
+            table[page_pos] = new_page
+            self.pool.stats.cow_copies += 1
+            return new_page
+        return page
+
+    # -- data plane ---------------------------------------------------------
+    def append(self, seq_id: int, layer_kv: List[Tuple[jnp.ndarray,
+                                                       jnp.ndarray]]
+               ) -> bool:
+        """Append ONE token's K/V for every layer.  layer_kv[i] is a
+        ((n_kv_heads, head_dim), (n_kv_heads, head_dim)) pair."""
+        pos = self.lengths[seq_id]
+        page_pos = pos // self.page_size
+        offset = pos % self.page_size
+        table = self.tables[seq_id]
+        if page_pos >= len(table):
+            page = self.pool.alloc()
+            if page is None:
+                return False
+            table.append(page)
+        page = self._writable_page(seq_id, page_pos)
+        if page is None:
+            return False
+        for layer, (k_t, v_t) in enumerate(layer_kv):
+            self.k[layer] = self.k[layer].at[page, offset].set(
+                k_t.astype(self.k[layer].dtype))
+            self.v[layer] = self.v[layer].at[page, offset].set(
+                v_t.astype(self.v[layer].dtype))
+        self.lengths[seq_id] = pos + 1
+        return True
+
+    def gather(self, seq_ids: Sequence[int], layer: int,
+               pad_to: Optional[int] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Materialize contiguous (B, n_kv, L, hd) K/V for a batch of
+        sequences from their page tables (gather-based paged attention;
+        a block-table Pallas kernel is the further TPU optimization)."""
+        max_len = max(self.lengths[s] for s in seq_ids)
+        pad_to = pad_to or max_len
+        max_pages = self.pages_needed(pad_to)
+        tables = np.zeros((len(seq_ids), max_pages), np.int32)
+        for i, s in enumerate(seq_ids):
+            t = self.tables[s][: max_pages]
+            tables[i, : len(t)] = t
+        idx = jnp.asarray(tables)                       # (B, P)
+        k = jnp.take(self.k[layer], idx, axis=0)        # (B,P,page,kv,hd)
+        v = jnp.take(self.v[layer], idx, axis=0)
+        b = len(seq_ids)
+        k = k.reshape(b, max_pages * self.page_size, self.n_kv_heads,
+                      self.head_dim)[:, :pad_to].transpose(0, 2, 1, 3)
+        v = v.reshape(b, max_pages * self.page_size, self.n_kv_heads,
+                      self.head_dim)[:, :pad_to].transpose(0, 2, 1, 3)
+        lens = jnp.asarray([self.lengths[s] for s in seq_ids], jnp.int32)
+        return k, v, lens
+
+    def memory_stats(self) -> Dict[str, float]:
+        page_bytes = (self.page_size * self.n_kv_heads * self.head_dim
+                      * 2 * self.k[0].dtype.itemsize * self.n_layers)
+        used = self.pool.num_pages - self.pool.num_free
+        return {
+            "pages_total": self.pool.num_pages,
+            "pages_used": used,
+            "pages_free": self.pool.num_free,
+            "bytes_used": used * page_bytes,
+            "prefix_hit_rate": self.pool.stats.hit_rate,
+            "cow_copies": self.pool.stats.cow_copies,
+            "oom_rejections": self.pool.stats.oom_rejections,
+        }

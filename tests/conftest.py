@@ -1,0 +1,10 @@
+import os
+import sys
+
+# smoke tests and benches must see the single real CPU device — the
+# 512-device flag belongs ONLY to the dry-run entry point.
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "do not set the dry-run XLA_FLAGS globally"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

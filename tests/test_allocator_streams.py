@@ -1,0 +1,155 @@
+"""Caching allocator (§5.3), refcounting (§5.5), streams/events (§5.2)."""
+
+import gc
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.core.allocator import (ROUND_BYTES, CachingAllocator,
+                                  round_size)
+from repro.core.stream import Event, Stream, current_stream, stream
+
+
+class TestRounding:
+    def test_rounds_to_512(self):
+        assert round_size(1) == ROUND_BYTES
+        assert round_size(512) == 512
+        assert round_size(513) == 1024
+
+    @given(n=st.integers(0, 1 << 24))
+    @settings(max_examples=100, deadline=None)
+    def test_round_properties(self, n):
+        r = round_size(n)
+        assert r >= max(n, ROUND_BYTES)
+        assert r % ROUND_BYTES == 0
+        assert r - n < ROUND_BYTES or n == 0
+
+
+class TestCachePolicy:
+    def test_same_size_reuses_block(self):
+        alloc = CachingAllocator()
+        b1 = alloc.allocate(1000, stream=0)
+        alloc.free(b1)
+        b2 = alloc.allocate(900, stream=0)  # same rounded size (1024)
+        assert b2 is b1
+        assert alloc.stats.num_cache_hits == 1
+        assert alloc.stats.num_system_allocs == 1
+
+    def test_per_stream_pools(self):
+        alloc = CachingAllocator()
+        b1 = alloc.allocate(1024, stream=0)
+        alloc.free(b1)
+        b2 = alloc.allocate(1024, stream=1)  # different pool: miss
+        assert b2 is not b1
+        assert alloc.stats.num_cache_misses == 2
+
+    def test_cross_stream_free_defers_reuse(self):
+        alloc = CachingAllocator()
+        b = alloc.allocate(2048, stream=0)
+        alloc.free(b, stream=1)          # freed on another stream
+        b2 = alloc.allocate(2048, stream=0)
+        assert b2 is not b               # not reusable until sync
+        alloc.synchronize()
+        b3 = alloc.allocate(2048, stream=0)
+        assert b3 is b
+
+    def test_empty_cache(self):
+        alloc = CachingAllocator()
+        blocks = [alloc.allocate(4096) for _ in range(4)]
+        for b in blocks:
+            alloc.free(b)
+        freed = alloc.empty_cache()
+        assert freed == 4 * 4096
+        assert alloc.stats.bytes_reserved == 0
+
+    @given(sizes=st.lists(st.integers(1, 1 << 16), min_size=1,
+                          max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_accounting_invariants(self, sizes):
+        """Property: active ≤ reserved; peak ≥ active; free-all zeroes
+        active but keeps reserved (the cache)."""
+        alloc = CachingAllocator()
+        blocks = []
+        for s in sizes:
+            blocks.append(alloc.allocate(s))
+            st_ = alloc.stats
+            assert st_.bytes_active <= st_.bytes_reserved
+            assert st_.peak_bytes_active >= st_.bytes_active
+        for b in blocks:
+            alloc.free(b)
+        assert alloc.stats.bytes_active == 0
+        assert alloc.stats.bytes_reserved == sum(
+            round_size(s) for s in sizes)
+        # second pass with identical sizes: 100% cache hits
+        before = alloc.stats.num_system_allocs
+        for s in sizes:
+            alloc.allocate(s)
+        assert alloc.stats.num_system_allocs == before
+
+
+class TestRefcounting:
+    def test_tensor_del_returns_block(self):
+        alloc = repro.allocator.device_allocator()
+        base_active = alloc.stats.bytes_active
+        t = repro.zeros(1024, 1024)  # 4MB
+        assert alloc.stats.bytes_active >= base_active + 4 * 1024 * 1024
+        del t
+        gc.collect()
+        assert alloc.stats.bytes_active <= base_active + ROUND_BYTES
+
+    def test_graph_release_frees_saved(self):
+        alloc = repro.allocator.device_allocator()
+        a = repro.randn(256, 256, requires_grad=True)
+        loss = (a.exp() * 2.0).sum()
+        mid = alloc.stats.bytes_active
+        loss.backward()  # releases node closures
+        del loss
+        gc.collect()
+        assert alloc.stats.bytes_active < mid
+
+    def test_views_share_storage(self):
+        t = repro.zeros(64, 64)
+        v = t[0]
+        assert v._storage is t._storage
+
+
+class TestStreams:
+    def test_current_stream_context(self):
+        s = Stream()
+        assert current_stream() is not s
+        with stream(s):
+            assert current_stream() is s
+            t = repro.randn(8)
+        assert current_stream() is not s
+
+    def test_stream_synchronize_and_query(self):
+        s = Stream()
+        with stream(s):
+            x = repro.randn(64, 64)
+            y = x @ x
+        s.synchronize()
+        assert s.query()
+
+    def test_event_ordering(self):
+        s1, s2 = Stream(), Stream()
+        with stream(s1):
+            x = repro.randn(32, 32) @ repro.randn(32, 32)
+        ev = s1.record_event()
+        s2.wait_event(ev)
+        assert ev.query()
+
+    def test_event_timing(self):
+        e1 = Event(enable_timing=True)
+        e2 = Event(enable_timing=True)
+        e1.record()
+        _ = repro.randn(64, 64) @ repro.randn(64, 64)
+        e2.record()
+        assert e1.elapsed_time(e2) >= 0.0
+
+    def test_tensor_tracks_stream(self):
+        s = Stream()
+        with stream(s):
+            t = repro.randn(4)
+        assert t._storage.stream_id == s.stream_id

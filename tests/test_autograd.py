@@ -1,0 +1,262 @@
+"""Define-by-run autograd engine: exactness vs jax.grad, versioning,
+graph lifecycle (paper §4.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+import repro.nn.functional as F
+from repro.core.autograd import Function, grad as autograd_grad
+
+
+def assert_grads_match(fn_repro, fn_jax, *arrays, rtol=1e-5, atol=1e-6):
+    tensors = [repro.tensor(a, requires_grad=True) for a in arrays]
+    out = fn_repro(*tensors)
+    out.backward()
+    jax_grads = jax.grad(
+        lambda *xs: fn_jax(*xs), argnums=tuple(range(len(arrays))))(*arrays)
+    for t, g in zip(tensors, jax_grads):
+        np.testing.assert_allclose(np.asarray(t.grad.data), np.asarray(g),
+                                   rtol=rtol, atol=atol)
+
+
+class TestTapeVsJax:
+    def test_matmul_relu_sum(self):
+        a = np.random.randn(4, 8).astype(np.float32)
+        b = np.random.randn(8, 3).astype(np.float32)
+        assert_grads_match(
+            lambda x, y: (x @ y).relu().sum(),
+            lambda x, y: jax.nn.relu(x @ y).sum(), a, b)
+
+    def test_broadcast_arith(self):
+        a = np.random.randn(4, 8).astype(np.float32)
+        b = np.random.randn(8).astype(np.float32)
+        assert_grads_match(
+            lambda x, y: ((x + y) * (x - y) / 2.0).sum(),
+            lambda x, y: ((x + y) * (x - y) / 2.0).sum(), a, b)
+
+    def test_softmax_logsumexp(self):
+        a = np.random.randn(5, 7).astype(np.float32)
+        assert_grads_match(
+            lambda x: (x.softmax(-1) * x.log_softmax(-1)).sum(),
+            lambda x: (jax.nn.softmax(x, -1)
+                       * jax.nn.log_softmax(x, -1)).sum(), a)
+
+    def test_reductions_and_reshapes(self):
+        a = np.random.randn(2, 3, 4).astype(np.float32)
+        assert_grads_match(
+            lambda x: x.reshape(6, 4).transpose(0, 1).mean(),
+            lambda x: x.reshape(6, 4).transpose(1, 0).T.mean(), a)
+
+    def test_indexing(self):
+        a = np.random.randn(6, 5).astype(np.float32)
+        assert_grads_match(
+            lambda x: (x[1:4] ** 2).sum(),
+            lambda x: (x[1:4] ** 2).sum(), a)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(2, 6), m=st.integers(2, 6),
+        ops=st.lists(st.sampled_from(
+            ["exp", "tanh", "sigmoid", "relu", "sqrtabs", "square"]),
+            min_size=1, max_size=4),
+    )
+    def test_random_unary_chains(self, n, m, ops):
+        """Property: tape gradients equal jax.grad for arbitrary chains."""
+        a = np.random.randn(n, m).astype(np.float32)
+
+        def chain_repro(x):
+            for op in ops:
+                if op == "sqrtabs":
+                    x = (x.abs() + 1.0).sqrt()
+                elif op == "square":
+                    x = x * x
+                else:
+                    x = getattr(x, op)()
+            return x.sum()
+
+        def chain_jax(x):
+            for op in ops:
+                if op == "sqrtabs":
+                    x = jnp.sqrt(jnp.abs(x) + 1.0)
+                elif op == "square":
+                    x = x * x
+                elif op == "relu":
+                    x = jax.nn.relu(x)
+                elif op == "sigmoid":
+                    x = jax.nn.sigmoid(x)
+                else:
+                    x = getattr(jnp, op)(x)
+            return x.sum()
+
+        assert_grads_match(chain_repro, chain_jax, a,
+                           rtol=1e-4, atol=1e-5)
+
+    def test_shared_subexpression_accumulates(self):
+        a = repro.randn(4, requires_grad=True)
+        b = a * 2.0
+        out = (b * b).sum() + b.sum()
+        out.backward()
+        expect = 2 * (2 * np.asarray(a.data) * 2.0) + 2.0
+        np.testing.assert_allclose(np.asarray(a.grad.data), expect,
+                                   rtol=1e-5)
+
+    def test_multi_output_node(self):
+        lstm_in = repro.randn(2, 5, 3, requires_grad=True)
+        import repro.nn as nn
+        lstm = nn.LSTM(3, 4)
+        out, (h, c) = lstm(lstm_in)
+        (out.sum() + h.sum()).backward()
+        assert lstm_in.grad is not None
+        assert lstm_in.grad.shape == (2, 5, 3)
+
+
+class TestVersioning:
+    def test_mutation_after_save_errors(self):
+        a = repro.randn(4, requires_grad=True)
+        c = a * 2.0
+        d = c.exp()
+        with repro.no_grad():
+            c.mul_(3.0)
+        with pytest.raises(RuntimeError, match="inplace"):
+            d.sum().backward()
+
+    def test_leaf_inplace_guard(self):
+        a = repro.randn(4, requires_grad=True)
+        with pytest.raises(RuntimeError, match="leaf"):
+            a.add_(1.0)
+
+    def test_differentiable_inplace(self):
+        a = repro.randn(4, requires_grad=True)
+        b = a * 2.0
+        b.add_(1.0)
+        b.mul_(3.0)
+        b.sum().backward()
+        np.testing.assert_allclose(np.asarray(a.grad.data),
+                                   np.full(4, 6.0), rtol=1e-6)
+
+    def test_view_writes_through(self):
+        v = repro.zeros(3, 4)
+        row = v[1]
+        row.fill_(7.0)
+        assert np.asarray(v.data)[1].tolist() == [7.0] * 4
+        v[2] = 5.0
+        assert np.asarray(v.data)[2].tolist() == [5.0] * 4
+
+    def test_view_shares_version(self):
+        v = repro.zeros(3, 4)
+        row = v[0]
+        assert row._version is v._version
+        row.fill_(1.0)
+        assert v._version.value > 0
+
+
+class TestGraphLifecycle:
+    def test_double_backward_without_retain_errors(self):
+        p = repro.randn(3, requires_grad=True)
+        q = (p * p).sum()
+        q.backward()
+        with pytest.raises(RuntimeError, match="second time"):
+            q.backward()
+
+    def test_retain_graph(self):
+        p = repro.randn(3, requires_grad=True)
+        q = (p * p).sum()
+        q.backward(retain_graph=True)
+        q.backward()
+        np.testing.assert_allclose(np.asarray(p.grad.data),
+                                   4 * np.asarray(p.data), rtol=1e-5)
+
+    def test_no_grad(self):
+        a = repro.randn(3, requires_grad=True)
+        with repro.no_grad():
+            b = a * 2.0
+        assert b.grad_fn is None
+
+    def test_grad_fn_named(self):
+        a = repro.randn(3, requires_grad=True)
+        assert (a * 2.0).grad_fn.name == "mul"
+
+    def test_autograd_grad_api(self):
+        a = repro.randn(3, requires_grad=True)
+        b = repro.randn(3, requires_grad=True)
+        out = (a * b).sum()
+        ga, gb = autograd_grad(out, [a, b])
+        np.testing.assert_allclose(np.asarray(ga.data),
+                                   np.asarray(b.data), rtol=1e-6)
+        assert a.grad is None  # .grad not polluted
+
+    def test_implicit_scalar_only(self):
+        a = repro.randn(3, requires_grad=True)
+        with pytest.raises(RuntimeError, match="scalar"):
+            (a * 2.0).backward()
+
+
+class TestCustomFunction:
+    def test_function_forward_backward(self):
+        class Cube(Function):
+            @staticmethod
+            def forward(ctx, x):
+                ctx.save_for_backward(x)
+                return repro.Tensor(x.data ** 3)
+
+            @staticmethod
+            def backward(ctx, g):
+                (x,) = ctx.saved_tensors
+                return repro.Tensor(3 * x.data ** 2) * g
+
+        a = repro.randn(5, requires_grad=True)
+        out = Cube.apply(a)
+        out.sum().backward()
+        np.testing.assert_allclose(np.asarray(a.grad.data),
+                                   3 * np.asarray(a.data) ** 2, rtol=1e-5)
+
+    def test_function_version_check(self):
+        class Identity(Function):
+            @staticmethod
+            def forward(ctx, x):
+                ctx.save_for_backward(x)
+                return repro.Tensor(x.data + 0)
+
+            @staticmethod
+            def backward(ctx, g):
+                return g
+
+        a = repro.randn(4, requires_grad=True)
+        b = a * 1.0
+        out = Identity.apply(b)
+        with repro.no_grad():
+            b.mul_(2.0)
+        with pytest.raises(RuntimeError, match="inplace"):
+            out.sum().backward()
+
+
+class TestCompiledPath:
+    def test_compile_matches_eager(self):
+        f = lambda x, w: (x @ w).relu().sum()
+        cf = repro.compile(f)
+        x = repro.randn(4, 8)
+        w = repro.randn(8, 3)
+        np.testing.assert_allclose(float(cf(x, w).data),
+                                   float(f(x, w).data), rtol=1e-6)
+
+    def test_tape_disabled_under_trace(self):
+        @repro.compile
+        def f(x):
+            y = x * 2.0
+            assert y.grad_fn is None  # tracing: no tape
+            return y.sum()
+
+        x = repro.randn(3, requires_grad=True)
+        out = f(x)
+        assert out.grad_fn is None
+
+    def test_value_and_grad(self):
+        vg = repro.value_and_grad(lambda x: (x.exp()).sum())
+        x = repro.randn(4)
+        v, g = vg(x)
+        np.testing.assert_allclose(np.asarray(g.data),
+                                   np.exp(np.asarray(x.data)), rtol=1e-5)

@@ -1,0 +1,207 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape &
+dtype sweeps, masking modes, gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(7)
+
+
+def rand(key_i, shape, dtype=jnp.float32, scale=1.0):
+    x = jax.random.normal(jax.random.fold_in(KEY, key_i), shape,
+                          jnp.float32) * scale
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("window", [None, 64])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_masks_and_dtypes(self, causal, window, dtype):
+        q = rand(1, (2, 4, 256, 128), dtype)
+        k = rand(2, (2, 2, 256, 128), dtype)
+        v = rand(3, (2, 2, 256, 128), dtype)
+        out = ops.flash_attention(q, k, v, causal, None, window)
+        exp = ref.flash_attention(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(exp, np.float32),
+            **TOL[dtype])
+
+    @pytest.mark.parametrize("shape", [
+        (1, 1, 128, 64),     # MQA small head
+        (2, 8, 384, 128),    # non-pow2 seq (block remainder)
+        (1, 4, 256, 96),     # pad path (d % 128 != 0, MLA-like)
+        (1, 4, 512, 256),    # gemma head_dim 256
+    ])
+    def test_shape_sweep(self, shape):
+        b, h, s, d = shape
+        hkv = max(1, h // 2)
+        q = rand(4, (b, h, s, d))
+        k = rand(5, (b, hkv, s, d))
+        v = rand(6, (b, hkv, s, d))
+        out = ops.flash_attention(q, k, v, True, None, None)
+        exp = ref.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_custom_scale(self):
+        q = rand(7, (1, 2, 128, 128))
+        k = rand(8, (1, 2, 128, 128))
+        v = rand(9, (1, 2, 128, 128))
+        out = ops.flash_attention(q, k, v, True, 0.05, None)
+        exp = ref.flash_attention(q, k, v, causal=True, scale=0.05)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_gradients_match_ref(self):
+        q = rand(10, (1, 4, 128, 64))
+        k = rand(11, (1, 2, 128, 64))
+        v = rand(12, (1, 2, 128, 64))
+        g1 = jax.grad(lambda a, b, c: ops.flash_attention(
+            a, b, c, True, None, None).sum(), argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(lambda a, b, c: ref.flash_attention(
+            a, b, c, causal=True).sum(), argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_jit_compatible(self):
+        q = rand(13, (1, 2, 128, 128))
+        k = rand(14, (1, 2, 128, 128))
+        v = rand(15, (1, 2, 128, 128))
+        f = jax.jit(lambda a, b, c: ops.flash_attention(a, b, c, True,
+                                                        None, None))
+        np.testing.assert_allclose(
+            np.asarray(f(q, k, v)),
+            np.asarray(ref.flash_attention(q, k, v, causal=True)),
+            rtol=2e-3, atol=2e-3)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("window", [None, 128])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_ragged_lengths(self, window, dtype):
+        B, Hq, Hkv, Smax, D = 3, 8, 2, 512, 128
+        q = rand(20, (B, Hq, 1, D), dtype)
+        kc = rand(21, (B, Hkv, Smax, D), dtype)
+        vc = rand(22, (B, Hkv, Smax, D), dtype)
+        lens = jnp.array([500, 512, 130], jnp.int32)
+        out = ops.decode_attention(q, kc, vc, lens, window=window)
+        exp = ref.decode_attention(q, kc, vc, lens, window=window)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   **TOL[dtype])
+
+    def test_scalar_len_broadcast(self):
+        q = rand(23, (2, 4, 1, 64))
+        kc = rand(24, (2, 4, 256, 64))
+        vc = rand(25, (2, 4, 256, 64))
+        out = ops.decode_attention(q, kc, vc, 77)
+        exp = ref.decode_attention(q, kc, vc, 77)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_mqa_group(self):
+        q = rand(26, (1, 8, 1, 128))
+        kc = rand(27, (1, 1, 256, 128))
+        vc = rand(28, (1, 1, 256, 128))
+        out = ops.decode_attention(q, kc, vc, jnp.array([200]))
+        exp = ref.decode_attention(q, kc, vc, jnp.array([200]))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("shape", [(2, 3, 128, 64), (1, 2, 96, 32),
+                                       (1, 1, 64, 128)])
+    def test_shapes(self, shape):
+        b, h, s, d = shape
+        r = rand(30, shape, scale=0.5)
+        k = rand(31, shape, scale=0.5)
+        v = rand(32, shape, scale=0.5)
+        w = jax.nn.sigmoid(rand(33, shape)) * 0.5 + 0.45
+        u = rand(34, (h, d), scale=0.1)
+        out, st = ops.rwkv6_scan(r, k, v, w, u)
+        eo, es = ref.rwkv6_scan(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(eo),
+                                   rtol=5e-3, atol=5e-3)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(es),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_bf16(self):
+        shape = (1, 2, 128, 64)
+        r = rand(35, shape, jnp.bfloat16, 0.5)
+        k = rand(36, shape, jnp.bfloat16, 0.5)
+        v = rand(37, shape, jnp.bfloat16, 0.5)
+        w = (jax.nn.sigmoid(rand(38, shape)) * 0.5 + 0.45).astype(
+            jnp.bfloat16)
+        u = rand(39, (2, 64), scale=0.1)
+        out, _ = ops.rwkv6_scan(r, k, v, w, u)
+        eo, _ = ref.rwkv6_scan(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(eo, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_grads(self):
+        shape = (1, 2, 64, 32)
+        r = rand(40, shape, scale=0.5)
+        k = rand(41, shape, scale=0.5)
+        v = rand(42, shape, scale=0.5)
+        w = jax.nn.sigmoid(rand(43, shape)) * 0.5 + 0.45
+        u = rand(44, (2, 32), scale=0.1)
+        g1 = jax.grad(lambda a: ops.rwkv6_scan(a, k, v, w, u)[0].sum())(r)
+        g2 = jax.grad(lambda a: ref.rwkv6_scan(a, k, v, w, u)[0].sum())(r)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=5e-3, atol=5e-3)
+
+
+class TestMambaScan:
+    @pytest.mark.parametrize("shape", [(2, 96, 256, 16), (1, 64, 512, 16),
+                                       (1, 128, 640, 8)])
+    def test_shapes(self, shape):
+        b, s, di, n = shape
+        x = rand(50, (b, s, di), scale=0.5)
+        dt = jax.nn.softplus(rand(51, (b, s, di))) * 0.1
+        B = rand(52, (b, s, n), scale=0.5)
+        C = rand(53, (b, s, n), scale=0.5)
+        A = -jnp.exp(rand(54, (di, n)))
+        D = jnp.ones((di,))
+        out = ops.mamba_scan(x, dt, B, C, A, D)
+        exp = ref.mamba_scan(x, dt, B, C, A, D)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_grads(self):
+        b, s, di, n = 1, 48, 128, 16
+        x = rand(55, (b, s, di), scale=0.5)
+        dt = jax.nn.softplus(rand(56, (b, s, di))) * 0.1
+        B = rand(57, (b, s, n), scale=0.5)
+        C = rand(58, (b, s, n), scale=0.5)
+        A = -jnp.exp(rand(59, (di, n)))
+        D = jnp.ones((di,))
+        g1 = jax.grad(lambda a: ops.mamba_scan(a, dt, B, C, A, D).sum())(x)
+        g2 = jax.grad(lambda a: ref.mamba_scan(a, dt, B, C, A, D).sum())(x)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_state_continuity_vs_chunking(self):
+        """Chunked kernel must be exact across chunk boundaries."""
+        b, s, di, n = 1, 130, 128, 16   # s straddles chunk=64 boundaries
+        x = rand(60, (b, s, di), scale=0.5)
+        dt = jax.nn.softplus(rand(61, (b, s, di))) * 0.1
+        B = rand(62, (b, s, n), scale=0.5)
+        C = rand(63, (b, s, n), scale=0.5)
+        A = -jnp.exp(rand(64, (di, n)))
+        D = jnp.ones((di,))
+        out = ops.mamba_scan(x, dt, B, C, A, D)
+        exp = ref.mamba_scan(x, dt, B, C, A, D)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=5e-3, atol=5e-3)
