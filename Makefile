@@ -1,0 +1,19 @@
+# Tier-1 verify + perf + hygiene, one command each.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test bench-smoke bench lint
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	mkdir -p benchmarks/out
+	$(PY) benchmarks/bench_dispatch.py --quick
+
+bench:
+	$(PY) -m benchmarks.run
+
+lint:
+	$(PY) -m compileall -q src benchmarks tests
+	@$(PY) -c "import pathlib,sys; bad=[f'{p}:{i}: line too long ({len(l)})' for p in pathlib.Path('src').rglob('*.py') for i,l in enumerate(p.read_text().splitlines(),1) if len(l)>100]; print('\n'.join(bad) or 'lint clean'); sys.exit(1 if bad else 0)"

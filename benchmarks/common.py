@@ -1,30 +1,57 @@
-"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+"""Benchmark utilities: timing + CSV/JSON emission.
 
+Rows accumulate in ``ROWS`` (CSV lines, printed as they land) and in
+``RECORDS`` (structured dicts).  ``write_json(path)`` dumps the records —
+the machine-readable perf trajectory tracked across PRs.
+"""
+
+import json
 import time
 from typing import Callable, Optional
 
 ROWS = []
+RECORDS = []
 
 
-def timeit(fn: Callable, *, warmup: int = 2, iters: int = 5) -> float:
-    """Median seconds per call."""
+def timeit(fn: Callable, *, warmup: int = 2, iters: int = 5,
+           between: Optional[Callable] = None,
+           stat: str = "median") -> float:
+    """Seconds per call (``stat``: "median" or "min").
+
+    ``between`` runs untimed before every timed call — e.g. a queue
+    drain, so async-dispatch benchmarks measure enqueue latency rather
+    than device-compute backpressure.  ``stat="min"`` is the
+    noise-robust choice for dispatch microbenchmarks on contended
+    machines."""
     for _ in range(warmup):
         fn()
     times = []
     for _ in range(iters):
+        if between is not None:
+            between()
         t0 = time.perf_counter()
         fn()
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    return times[0] if stat == "min" else times[len(times) // 2]
 
 
-def emit(name: str, seconds: float, derived: str = "") -> None:
+def emit(name: str, seconds: float, derived: str = "", **extra) -> None:
     us = seconds * 1e6
     row = f"{name},{us:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "us_per_call": round(us, 2),
+                    "derived": derived, **extra})
     print(row, flush=True)
 
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+def write_json(path: str, meta: Optional[dict] = None) -> None:
+    """Dump every emitted record (plus optional run metadata) as JSON."""
+    payload = {"meta": meta or {}, "records": RECORDS}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[json] {path}", flush=True)

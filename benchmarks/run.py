@@ -4,6 +4,8 @@
 
 Sections:
   table1      — Table 1 training throughput (eager vs compiled)
+  dispatch    — eager fast path: dispatch cache cold/warm, elementwise
+                fusion on/off, foreach vs per-leaf optimizer
   runtime     — Fig. 1 async dispatch, Fig. 2 caching allocator,
                 §5.5 refcount memory, §5.4 dataloader transport
   serving     — paged-KV engine + kernel wall-times (CPU interpret)
@@ -50,7 +52,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", default=True)
     ap.add_argument("--sections",
-                    default="table1,runtime,serving,roofline")
+                    default="table1,dispatch,runtime,serving,roofline")
     args = ap.parse_args()
     sections = set(args.sections.split(","))
 
@@ -58,6 +60,9 @@ def main() -> None:
     if "table1" in sections:
         from . import bench_table1
         bench_table1.run(quick=args.quick)
+    if "dispatch" in sections:
+        from . import bench_dispatch
+        bench_dispatch.run(quick=args.quick)
     if "runtime" in sections:
         from . import bench_runtime
         bench_runtime.run(quick=args.quick)

@@ -5,15 +5,21 @@ Layers:
   autograd   — define-by-run tape, Function, no_grad, backward engine
   allocator  — caching block allocator (512B rounding, per-stream pools)
   stream     — streams/events: separate control flow from data flow
-  fuse       — the compiled path (jit bridge / TorchScript analogue)
+  dispatch   — signature-keyed op/VJP cache (the eager fast path)
+  fuse       — the compiled path (jit bridge) + elementwise fusion queue
 """
 
 from . import allocator
 from . import autograd
+from . import dispatch
 from . import fuse
 from . import stream
 from .autograd import Function, enable_grad, grad, is_grad_enabled, no_grad
-from .fuse import block_until_ready, compile, value_and_grad
+from .dispatch import (
+    dispatch_cache_stats,
+    reset_dispatch_cache,
+)
+from .fuse import block_until_ready, compile, fusion, value_and_grad
 from .stream import Event, Stream, current_stream, default_stream, \
     stream as stream_ctx, synchronize
 from .tensor import (

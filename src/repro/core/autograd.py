@@ -164,6 +164,11 @@ def backward(tensors, grads=None, retain_graph: bool = False) -> None:
     elif isinstance(grads, Tensor) or grads is Ellipsis:
         grads = [grads]
 
+    # backward is a materialization point: flush pending fusion chains so
+    # every root has its grad_fn recorded before the graph walk
+    for t in tensors:
+        t._data  # noqa: B018  (property read flushes)
+
     # Seed cotangents
     roots: List[Tuple[Node, int, jnp.ndarray]] = []
     for t, g in zip(tensors, grads):

@@ -1,0 +1,234 @@
+"""Signature-keyed eager dispatch cache (the fast path for §5's claim).
+
+Eager dispatch used to pay a full ``jax.vjp`` re-trace on *every* operator
+call, so Python + trace overhead dominated the small-op regime the paper
+benchmarks in Table 1.  This module removes that cost: each distinct
+dispatch *signature*
+
+    (op name, static args, per-input (shape, dtype), grad-enabled flag)
+
+maps to a cached entry holding
+
+  * ``fwd``  — a ``jax.jit`` of the op's forward, traced once and then
+    replayed as an XLA executable (a dict lookup + replay per dispatch),
+  * ``bwd``  — a lazily-built ``jax.jit`` of ``cot -> jax.vjp(fn,
+    *inputs)[1](cot)``.  Residuals are the op's *inputs* (which the tape
+    holds alive anyway), so the cached VJP recomputes the forward inside
+    the backward executable — the flash-attention-style recompute trade:
+    exact gradients, no retracing, and XLA fuses the recompute away for
+    elementwise ops.
+
+Cache-key contract: the ``static`` tuple supplied by a call site must
+capture **everything** the op closure depends on besides the tensor
+operands (axes, dtypes, scalar clamp bounds, ...).  Call sites that cannot
+guarantee that pass ``static=None`` and stay uncached.  Unhashable or
+array-valued statics fall back to the uncached path and bump a warning
+counter instead of raising (``num_fallback_unhashable``).
+
+Invalidation: entries are immutable pure functions of their key — shapes
+or dtypes changing produces a *different* key, and in-place tensor
+mutation is handled by the autograd version counters, not the cache — so
+there is no invalidation protocol beyond wholesale eviction when the
+entry table exceeds ``max_entries``.
+
+Observability mirrors the caching allocator's stats API::
+
+    repro.dispatch_cache_stats()   # dict of counters
+    repro.reset_dispatch_cache()   # drop entries + zero counters
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+# ----------------------------------------------------------------------
+# stats
+# ----------------------------------------------------------------------
+
+
+@dataclass
+class DispatchCacheStats:
+    num_hits: int = 0                  # warm dispatch: executable replay
+    num_misses: int = 0                # first-signature dispatch: trace
+    num_uncached: int = 0              # no static descriptor supplied
+    num_fallback_unhashable: int = 0   # statics present but unhashable
+    num_evictions: int = 0             # wholesale clears on overflow
+    num_entries: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+# ----------------------------------------------------------------------
+# cache entries
+# ----------------------------------------------------------------------
+
+
+def partial_vjp(fn: Callable, args: Sequence[Any],
+                diffable: Sequence[int]):
+    """``jax.vjp`` of ``fn`` w.r.t. the ``diffable`` argument positions
+    only, closing over the rest (integer/bool operands).  Returns
+    ``(out, vjp_fn)`` where ``vjp_fn`` yields cotangents for the
+    diffable positions.  The single implementation behind the cached
+    backward, the uncached ``_apply_op`` branch, and fused-chain
+    flushes."""
+    n = len(args)
+    diffable = tuple(diffable)
+    if len(diffable) == n:
+        return jax.vjp(fn, *args)
+
+    frozen = {i: args[i] for i in range(n) if i not in diffable}
+
+    def fn_diff(*diff_args):
+        full = [frozen.get(i) for i in range(n)]
+        it = iter(diff_args)
+        for i in diffable:
+            full[i] = next(it)
+        return fn(*full)
+
+    return jax.vjp(fn_diff, *[args[i] for i in diffable])
+
+
+class CacheEntry:
+    """Jitted forward + lazily-built jitted VJP for one dispatch key."""
+
+    __slots__ = ("fwd", "_fn", "_diffable", "_n_args", "_bwd")
+
+    def __init__(self, fn: Callable, diffable: Sequence[int], n_args: int,
+                 wrap: Optional[Callable] = None):
+        self._fn = fn
+        self._diffable = tuple(diffable)
+        self._n_args = n_args
+        self.fwd = (wrap or jax.jit)(fn)
+        self._bwd = None
+
+    def bwd(self) -> Callable:
+        """``(inputs_tuple, cotangent) -> input cotangents`` (diffable
+        positions only), jitted on first use."""
+        if self._bwd is None:
+            fn, diffable = self._fn, self._diffable
+
+            def bwd_fn(args, cot):
+                return partial_vjp(fn, args, diffable)[1](cot)
+
+            self._bwd = jax.jit(bwd_fn)
+        return self._bwd
+
+
+# ----------------------------------------------------------------------
+# the cache
+# ----------------------------------------------------------------------
+
+
+class DispatchCache:
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self._lock = threading.RLock()
+        self._entries: Dict[Any, CacheEntry] = {}
+        self.stats = DispatchCacheStats()
+
+    def get_or_create(self, key, fn: Callable, diffable: Sequence[int],
+                      n_args: int,
+                      wrap: Optional[Callable] = None) -> CacheEntry:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.stats.num_hits += 1
+                return entry
+            if len(self._entries) >= self.max_entries:
+                # runaway-signature backstop: wholesale clear, like
+                # allocator.empty_cache() — correctness is unaffected
+                self._entries.clear()
+                self.stats.num_evictions += 1
+            entry = CacheEntry(fn, diffable, n_args, wrap=wrap)
+            self._entries[key] = entry
+            self.stats.num_misses += 1
+            self.stats.num_entries = len(self._entries)
+            return entry
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.stats = DispatchCacheStats()
+
+    def memory_stats(self) -> Dict[str, int]:
+        with self._lock:
+            self.stats.num_entries = len(self._entries)
+            return self.stats.as_dict()
+
+
+_cache = DispatchCache()
+
+_enabled = os.environ.get("REPRO_DISPATCH_CACHE", "1") != "0"
+
+
+def dispatch_cache() -> DispatchCache:
+    return _cache
+
+
+def is_enabled() -> bool:
+    return _enabled
+
+
+def set_enabled(flag: bool) -> bool:
+    """Toggle the cache globally; returns the previous setting."""
+    global _enabled
+    prev = _enabled
+    _enabled = bool(flag)
+    return prev
+
+
+class cache_disabled:
+    """Context manager: run a block with the dispatch cache off (the
+    cold / re-traced path — used by benchmarks and A/B tests)."""
+
+    def __enter__(self):
+        self._prev = set_enabled(False)
+        return self
+
+    def __exit__(self, *exc):
+        set_enabled(self._prev)
+
+
+def dispatch_cache_stats() -> Dict[str, int]:
+    return _cache.memory_stats()
+
+
+def reset_dispatch_cache() -> None:
+    _cache.clear()
+
+
+# ----------------------------------------------------------------------
+# key construction
+# ----------------------------------------------------------------------
+
+
+def signature_of(datas: Sequence[Any]) -> Tuple:
+    return tuple((tuple(d.shape), str(d.dtype)) for d in datas)
+
+
+def _typed(static):
+    """Type-tag static leaves: ``0``, ``0.0``, and ``False`` hash and
+    compare equal in Python, but bake into *different* closures (dtype
+    promotion differs), so they must occupy different cache keys."""
+    if isinstance(static, tuple):
+        return tuple(_typed(s) for s in static)
+    return (static.__class__.__name__, static)
+
+
+def make_key(name: str, static, datas: Sequence[Any],
+             grad: bool) -> Optional[Tuple]:
+    """Build the dispatch key, or ``None`` when the statics are not
+    usable as a key (unhashable values — the caller falls back to the
+    uncached path and bumps ``num_fallback_unhashable``)."""
+    key = (name, _typed(static), signature_of(datas), grad)
+    try:
+        hash(key)
+    except TypeError:
+        return None
+    return key

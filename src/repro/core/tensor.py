@@ -17,6 +17,23 @@ operator-overloaded programming model of the paper:
 When any operand is a JAX tracer (i.e. we are inside a ``jit`` trace), the
 tape is skipped and ops lower straight to XLA; differentiation of compiled
 code is handled by JAX's AD.  This is the eager/compiled split of the paper.
+
+Dispatch fast path (§5 "as fast as the hardware allows"):
+
+* every differentiable op funnels through :func:`_apply_op`, which consults
+  the signature-keyed **dispatch cache** (``core.dispatch``): the first
+  call for a given (op, static args, input shapes/dtypes, grad flag) traces
+  a jitted forward and a jitted VJP replay; every subsequent call is a dict
+  lookup + XLA executable replay — no ``jax.vjp`` re-trace.  Call sites
+  pass ``static=...`` tuples naming everything their closure captures;
+  unhashable statics fall back to the uncached re-traced path with a
+  warning counter instead of raising.
+* when the **elementwise fusion queue** is enabled
+  (``repro.fuse.fusion()``), elementwise ops return *pending* tensors that
+  record the chain instead of dispatching; materialization points
+  (``.numpy()``, ``.item()``, reductions, matmul, ``backward``, in-place
+  mutation, jit boundaries) flush the chain as one fused kernel.  Reads of
+  ``Tensor._data`` are the single materialization funnel.
 """
 
 from __future__ import annotations
@@ -30,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import allocator as _alloc
+from . import dispatch as _dispatch
 from . import stream as _stream
 from .autograd import (
     Node,
@@ -38,6 +56,17 @@ from .autograd import (
     is_grad_enabled,
     no_grad,
 )
+
+_fuse_mod = None
+
+
+def _fuse():
+    """Lazy import of ``core.fuse`` (it imports this module at top level)."""
+    global _fuse_mod
+    if _fuse_mod is None:
+        from . import fuse as f
+        _fuse_mod = f
+    return _fuse_mod
 
 Array = jax.Array
 DTypeLike = Any
@@ -70,9 +99,22 @@ class Storage:
 
 def _nbytes_of(data: Array) -> int:
     try:
-        return int(np.prod(data.shape)) * data.dtype.itemsize
+        return math.prod(data.shape) * data.dtype.itemsize
     except Exception:
         return 0
+
+
+_inexact_cache: dict = {}
+
+
+def _is_inexact(dtype) -> bool:
+    """Cached ``jnp.issubdtype(dtype, jnp.inexact)`` — on the per-op hot
+    path twice per operand."""
+    r = _inexact_cache.get(dtype)
+    if r is None:
+        r = _inexact_cache[dtype] = bool(
+            jnp.issubdtype(dtype, jnp.inexact))
+    return r
 
 
 def _is_tracer(x: Any) -> bool:
@@ -85,7 +127,8 @@ def _is_tracer(x: Any) -> bool:
 
 class Tensor:
     __slots__ = (
-        "_data",
+        "_d",           # the jax.Array (None while a fusion chain pends)
+        "_pending",     # fuse.PendingOp when lazily enqueued, else None
         "requires_grad",
         "grad",
         "grad_fn",
@@ -96,6 +139,21 @@ class Tensor:
         "_view_index",  # the indexing expression creating the view
         "__weakref__",
     )
+
+    # ``_data`` is the materialization funnel: reading it flushes any
+    # pending fusion chain; every path that needs concrete values
+    # (numpy(), reductions via _apply_op, backward, jit boundaries)
+    # goes through here.
+    @property
+    def _data(self) -> Array:
+        if self._pending is not None:
+            _fuse().flush_tensor(self)
+        return self._d
+
+    @_data.setter
+    def _data(self, value) -> None:
+        self._d = value
+        self._pending = None
 
     def __init__(self, data: Any, requires_grad: bool = False,
                  _storage: Optional[Storage] = None,
@@ -137,19 +195,25 @@ class Tensor:
 
     @property
     def shape(self) -> Tuple[int, ...]:
-        return tuple(self._data.shape)
+        # metadata reads must not force a pending chain to materialize
+        if self._pending is not None:
+            return self._pending.shape
+        return tuple(self._d.shape)
 
     @property
     def dtype(self):
-        return self._data.dtype
+        if self._pending is not None:
+            return self._pending.dtype
+        return self._d.dtype
 
     @property
     def ndim(self) -> int:
-        return self._data.ndim
+        return len(self.shape)
 
     @property
     def size_bytes(self) -> int:
-        return _nbytes_of(self._data)
+        return int(np.prod(self.shape) if self.shape else 1) * \
+            np.dtype(self.dtype).itemsize
 
     @property
     def is_leaf(self) -> bool:
@@ -231,7 +295,7 @@ class Tensor:
         return self
 
     def clone(self) -> "Tensor":
-        return _apply_op("clone", lambda x: x + 0, self)
+        return _apply_op("clone", lambda x: x + 0, self, static=())
 
     def retain_grad(self) -> "Tensor":
         # non-leaf grads: wrap identity so engine treats as leaf-like sink
@@ -240,7 +304,8 @@ class Tensor:
 
     # -- dtype / device movement ----------------------------------------
     def astype(self, dtype) -> "Tensor":
-        return _apply_op("astype", lambda x: x.astype(dtype), self)
+        return _apply_op("astype", lambda x: x.astype(dtype), self,
+                         static=(np.dtype(dtype).name,))
 
     def to(self, dtype=None) -> "Tensor":
         if dtype is None:
@@ -304,13 +369,14 @@ class Tensor:
         return matmul(_coerce(other, like=self), self)
 
     def __neg__(self):
-        return _apply_op("neg", lambda x: -x, self)
+        return _apply_op("neg", lambda x: -x, self, static=())
 
     def __abs__(self):
-        return _apply_op("abs", jnp.abs, self)
+        return _apply_op("abs", jnp.abs, self, static=())
 
     def __mod__(self, other):
-        return _apply_op("mod", jnp.mod, self, _coerce(other, like=self))
+        return _apply_op("mod", jnp.mod, self, _coerce(other, like=self),
+                         static=())
 
     # comparisons (non-differentiable)
     def __eq__(self, other):  # type: ignore[override]
@@ -334,7 +400,9 @@ class Tensor:
     # -- indexing ---------------------------------------------------------
     def __getitem__(self, index) -> "Tensor":
         index = _raw_index(index)
-        out = _apply_op("getitem", lambda x: x[index], self)
+        tok = _hashable_index_token(index)
+        out = _apply_op("getitem", lambda x: x[index], self,
+                        static=(tok,) if tok is not None else None)
         # basic-indexing results are views: share version counter so
         # mutation through either side is detected / written through.
         if _is_basic_index(index):
@@ -361,6 +429,9 @@ class Tensor:
     def _write_through(self, fn: Callable[[Array], Array]) -> None:
         """Apply ``fn`` to this tensor's data, writing through views to the
         base storage, and bump the shared version counter."""
+        # mutation is a fusion barrier: pending chains captured this
+        # tensor's pre-mutation value, so they must materialize first
+        _fuse().flush_all()
         if self._base is not None:
             base = self._base
             idx = self._view_index
@@ -373,6 +444,7 @@ class Tensor:
 
     def _inplace_binary(self, opname: str, fn, other, alpha=None):
         self._inplace_guard(opname)
+        _fuse().flush_all()  # mutation is a fusion barrier
         o = _raw(other)
         if alpha is not None:
             o = o * alpha
@@ -393,7 +465,7 @@ class Tensor:
             snapshot._output_index = self._output_index
             snapshot.requires_grad = self.requires_grad
             other_t = other if isinstance(other, Tensor) else Tensor(o)
-            res = _apply_op(opname, fn, snapshot, other_t)
+            res = _apply_op(opname, fn, snapshot, other_t, static=())
             self._data = res._data
             self.grad_fn = res.grad_fn
             self._output_index = res._output_index
@@ -437,28 +509,33 @@ class Tensor:
     # -- shape ops ---------------------------------------------------------
     def reshape(self, *shape) -> "Tensor":
         shape = _norm_shape(shape)
-        return _apply_op("reshape", lambda x: x.reshape(shape), self)
+        return _apply_op("reshape", lambda x: x.reshape(shape), self,
+                         static=(shape,))
 
     view = reshape
 
     def transpose(self, dim0: int, dim1: int) -> "Tensor":
         perm = list(range(self.ndim))
         perm[dim0], perm[dim1] = perm[dim1], perm[dim0]
-        return _apply_op("transpose", lambda x: jnp.transpose(x, perm), self)
+        return _apply_op("transpose", lambda x: jnp.transpose(x, perm), self,
+                         static=(tuple(perm),))
 
     def permute(self, *dims) -> "Tensor":
         dims = _norm_shape(dims)
-        return _apply_op("permute", lambda x: jnp.transpose(x, dims), self)
+        return _apply_op("permute", lambda x: jnp.transpose(x, dims), self,
+                         static=(dims,))
 
     @property
     def T(self) -> "Tensor":
-        return _apply_op("T", lambda x: x.T, self)
+        return _apply_op("T", lambda x: x.T, self, static=())
 
     def squeeze(self, dim: Optional[int] = None) -> "Tensor":
-        return _apply_op("squeeze", lambda x: jnp.squeeze(x, dim), self)
+        return _apply_op("squeeze", lambda x: jnp.squeeze(x, dim), self,
+                         static=(dim,))
 
     def unsqueeze(self, dim: int) -> "Tensor":
-        return _apply_op("unsqueeze", lambda x: jnp.expand_dims(x, dim), self)
+        return _apply_op("unsqueeze", lambda x: jnp.expand_dims(x, dim),
+                         self, static=(dim,))
 
     def flatten(self, start_dim: int = 0, end_dim: int = -1) -> "Tensor":
         shape = self.shape
@@ -472,11 +549,13 @@ class Tensor:
             s if s != -1 else self.shape[i - (len(sizes) - self.ndim)]
             for i, s in enumerate(sizes)
         )
-        return _apply_op("expand", lambda x: jnp.broadcast_to(x, tgt), self)
+        return _apply_op("expand", lambda x: jnp.broadcast_to(x, tgt), self,
+                         static=(tgt,))
 
     def repeat(self, *reps) -> "Tensor":
         reps = _norm_shape(reps)
-        return _apply_op("repeat", lambda x: jnp.tile(x, reps), self)
+        return _apply_op("repeat", lambda x: jnp.tile(x, reps), self,
+                         static=(reps,))
 
     def chunk(self, chunks: int, dim: int = 0):
         return split(self, self.shape[dim] // chunks, dim)
@@ -487,35 +566,41 @@ class Tensor:
     # -- math methods -------------------------------------------------------
     def sum(self, dim=None, keepdim: bool = False):
         return _apply_op("sum", lambda x: jnp.sum(x, axis=dim,
-                                                  keepdims=keepdim), self)
+                                                  keepdims=keepdim), self,
+                         static=(_hashable_axis(dim), keepdim))
 
     def mean(self, dim=None, keepdim: bool = False):
         return _apply_op("mean", lambda x: jnp.mean(x, axis=dim,
-                                                    keepdims=keepdim), self)
+                                                    keepdims=keepdim), self,
+                         static=(_hashable_axis(dim), keepdim))
 
     def var(self, dim=None, keepdim: bool = False, unbiased: bool = True):
         ddof = 1 if unbiased else 0
         return _apply_op("var", lambda x: jnp.var(x, axis=dim, ddof=ddof,
-                                                  keepdims=keepdim), self)
+                                                  keepdims=keepdim), self,
+                         static=(_hashable_axis(dim), keepdim, ddof))
 
     def std(self, dim=None, keepdim: bool = False, unbiased: bool = True):
         ddof = 1 if unbiased else 0
         return _apply_op("std", lambda x: jnp.std(x, axis=dim, ddof=ddof,
-                                                  keepdims=keepdim), self)
+                                                  keepdims=keepdim), self,
+                         static=(_hashable_axis(dim), keepdim, ddof))
 
     def max(self, dim=None, keepdim: bool = False):
         if dim is None:
-            return _apply_op("max", jnp.max, self)
+            return _apply_op("max", jnp.max, self, static=())
         values = _apply_op(
-            "max", lambda x: jnp.max(x, axis=dim, keepdims=keepdim), self)
+            "max", lambda x: jnp.max(x, axis=dim, keepdims=keepdim), self,
+            static=(_hashable_axis(dim), keepdim))
         indices = Tensor(jnp.argmax(self._data, axis=dim))
         return values, indices
 
     def min(self, dim=None, keepdim: bool = False):
         if dim is None:
-            return _apply_op("min", jnp.min, self)
+            return _apply_op("min", jnp.min, self, static=())
         values = _apply_op(
-            "min", lambda x: jnp.min(x, axis=dim, keepdims=keepdim), self)
+            "min", lambda x: jnp.min(x, axis=dim, keepdims=keepdim), self,
+            static=(_hashable_axis(dim), keepdim))
         indices = Tensor(jnp.argmin(self._data, axis=dim))
         return values, indices
 
@@ -527,59 +612,65 @@ class Tensor:
 
     def prod(self, dim=None, keepdim: bool = False):
         return _apply_op("prod", lambda x: jnp.prod(x, axis=dim,
-                                                    keepdims=keepdim), self)
+                                                    keepdims=keepdim), self,
+                         static=(_hashable_axis(dim), keepdim))
 
     def cumsum(self, dim: int):
-        return _apply_op("cumsum", lambda x: jnp.cumsum(x, axis=dim), self)
+        return _apply_op("cumsum", lambda x: jnp.cumsum(x, axis=dim), self,
+                         static=(dim,))
 
     def exp(self):
-        return _apply_op("exp", jnp.exp, self)
+        return _apply_op("exp", jnp.exp, self, static=())
 
     def log(self):
-        return _apply_op("log", jnp.log, self)
+        return _apply_op("log", jnp.log, self, static=())
 
     def sqrt(self):
-        return _apply_op("sqrt", jnp.sqrt, self)
+        return _apply_op("sqrt", jnp.sqrt, self, static=())
 
     def rsqrt(self):
-        return _apply_op("rsqrt", lambda x: jax.lax.rsqrt(x), self)
+        return _apply_op("rsqrt", lambda x: jax.lax.rsqrt(x), self,
+                         static=())
 
     def abs(self):
-        return _apply_op("abs", jnp.abs, self)
+        return _apply_op("abs", jnp.abs, self, static=())
 
     def sin(self):
-        return _apply_op("sin", jnp.sin, self)
+        return _apply_op("sin", jnp.sin, self, static=())
 
     def cos(self):
-        return _apply_op("cos", jnp.cos, self)
+        return _apply_op("cos", jnp.cos, self, static=())
 
     def tanh(self):
-        return _apply_op("tanh", jnp.tanh, self)
+        return _apply_op("tanh", jnp.tanh, self, static=())
 
     def sigmoid(self):
-        return _apply_op("sigmoid", jax.nn.sigmoid, self)
+        return _apply_op("sigmoid", jax.nn.sigmoid, self, static=())
 
     def relu(self):
-        return _apply_op("relu", jax.nn.relu, self)
+        return _apply_op("relu", jax.nn.relu, self, static=())
 
     def erf(self):
-        return _apply_op("erf", jax.scipy.special.erf, self)
+        return _apply_op("erf", jax.scipy.special.erf, self, static=())
 
     def clamp(self, min=None, max=None):
-        return _apply_op("clamp", lambda x: jnp.clip(x, min, max), self)
+        return _apply_op("clamp", lambda x: jnp.clip(x, min, max), self,
+                         static=(min, max))
 
     def softmax(self, dim: int = -1):
         return _apply_op("softmax",
-                         lambda x: jax.nn.softmax(x, axis=dim), self)
+                         lambda x: jax.nn.softmax(x, axis=dim), self,
+                         static=(dim,))
 
     def log_softmax(self, dim: int = -1):
         return _apply_op("log_softmax",
-                         lambda x: jax.nn.log_softmax(x, axis=dim), self)
+                         lambda x: jax.nn.log_softmax(x, axis=dim), self,
+                         static=(dim,))
 
     def masked_fill(self, mask, value):
-        m = _raw(mask)
         return _apply_op("masked_fill",
-                         lambda x: jnp.where(m, value, x), self)
+                         lambda x, m: jnp.where(m, value, x), self,
+                         _coerce(mask), static=(value,))
 
     def matmul(self, other):
         return matmul(self, other)
@@ -606,10 +697,18 @@ def _raw(x: Any) -> Any:
     return x._data if isinstance(x, Tensor) else x
 
 
+def _raw_index_item(i):
+    i = _raw(i)
+    # torch allows list indices (`x[[0, 2]]`); jax wants real arrays
+    if isinstance(i, list):
+        return jnp.asarray(i)
+    return i
+
+
 def _raw_index(index):
     if isinstance(index, tuple):
-        return tuple(_raw(i) for i in index)
-    return _raw(index)
+        return tuple(_raw_index_item(i) for i in index)
+    return _raw_index_item(index)
 
 
 def _is_basic_index(index) -> bool:
@@ -618,14 +717,65 @@ def _is_basic_index(index) -> bool:
                for i in items)
 
 
+def _hashable_axis(dim):
+    """Reduction axes as a cache-key token (lists become tuples)."""
+    return tuple(dim) if isinstance(dim, list) else dim
+
+
+def _hashable_index_token(index):
+    """A hashable token for a basic index expression, or ``None`` for
+    advanced (array) indexing — which then dispatches uncached.  Needed
+    because ``slice`` is unhashable before Python 3.12."""
+    items = index if isinstance(index, tuple) else (index,)
+    toks = []
+    for i in items:
+        if isinstance(i, (bool, np.bool_)):
+            # bool is an int subclass: x[True] must not replay x[1]
+            toks.append(("b", bool(i)))
+        elif isinstance(i, (int, np.integer)):
+            toks.append(("i", int(i)))
+        elif i is None:
+            toks.append(("n",))
+        elif i is Ellipsis:
+            toks.append(("e",))
+        elif isinstance(i, slice):
+            parts = (i.start, i.stop, i.step)
+            if not all(isinstance(v, (int, np.integer, type(None)))
+                       for v in parts):
+                return None
+            toks.append(("s",) + tuple(
+                int(v) if v is not None else None for v in parts))
+        else:
+            return None
+    return tuple(toks)
+
+
+_scalar_cache: dict = {}
+
+
 def _coerce(x: Any, like: Optional[Tensor] = None) -> Tensor:
     if isinstance(x, Tensor):
         return x
+    if type(x) in (int, float, bool):
+        # hot path: `t * 2.0` pays a device transfer per dispatch unless
+        # the scalar constant is cached (jax arrays are immutable, so
+        # sharing the buffer across Tensors is safe)
+        dt = like.dtype if (like is not None and _is_inexact(like.dtype)) \
+            else None
+        key = (type(x), x, str(dt))
+        arr = _scalar_cache.get(key)
+        if arr is None:
+            arr = jnp.asarray(x) if dt is None \
+                else jnp.asarray(x, dtype=dt)
+            if len(_scalar_cache) > 1024:
+                _scalar_cache.clear()
+            _scalar_cache[key] = arr
+        return Tensor(arr)
     arr = jnp.asarray(x)
-    if (like is not None and jnp.issubdtype(like.dtype, jnp.inexact)
-            and not jnp.issubdtype(arr.dtype, jnp.inexact)):
+    if (like is not None and _is_inexact(like.dtype)
+            and not _is_inexact(arr.dtype)):
         arr = arr.astype(like.dtype)
-    elif (like is not None and jnp.issubdtype(like.dtype, jnp.inexact)
+    elif (like is not None and _is_inexact(like.dtype)
             and arr.dtype != like.dtype and np.isscalar(x)):
         arr = arr.astype(like.dtype)
     return Tensor(arr)
@@ -646,20 +796,51 @@ def _wrap_outputs(raw, node: Optional[Node]):
     return tensors[0] if single else tuple(tensors)
 
 
+_STATIC_OK_TYPES = (int, float, bool, str, bytes, type(None), type,
+                    type(Ellipsis), np.dtype)
+
+
+def _static_ok(static) -> bool:
+    """True when a static descriptor is safe to use as a cache-key
+    component: plain hashable scalars/axes/dtypes only.  Tensors are
+    hashable (by id) but must NOT be baked into a cached closure — data
+    would go stale under mutation — so they disqualify the key."""
+    if isinstance(static, tuple):
+        return all(_static_ok(s) for s in static)
+    if isinstance(static, _STATIC_OK_TYPES):
+        return True
+    return isinstance(static, np.integer) or isinstance(static, np.floating)
+
+
 def _apply_op(name: str, fn: Callable, *tensors: Tensor,
-              num_outputs: int = 1):
+              num_outputs: int = 1, static=None):
     """Execute ``fn`` over tensor data; record a tape node when needed.
 
     This is the single funnel for every differentiable eager op.  Inside a
     ``jax.jit`` trace (tracer operands) the tape is skipped entirely and the
     op lowers to XLA — the compiled path differentiates via JAX AD.
+
+    ``static`` is the dispatch-cache contract: a hashable tuple naming
+    everything ``fn``'s closure captures besides the tensor operands.
+    When supplied, repeated dispatches with the same signature replay
+    cached jitted executables instead of re-tracing ``jax.vjp``; when
+    ``None`` (or unhashable), the op takes the legacy uncached path.
     """
+    cacheable = static is not None and _static_ok(static)
+
+    # Elementwise fusion queue: defer the op entirely, returning a
+    # pending tensor that records the chain (flushed as ONE kernel at a
+    # materialization point).  Must run before touching operand data.
+    if cacheable and num_outputs == 1:
+        pending = _fuse().try_enqueue(name, fn, static, tensors)
+        if pending is not None:
+            return pending
+
     datas = [t._data for t in tensors]
     tracing = any(_is_tracer(d) for d in datas)
 
     diffable = [
-        i for i, t in enumerate(tensors)
-        if jnp.issubdtype(t.dtype, jnp.inexact)
+        i for i, t in enumerate(tensors) if _is_inexact(t.dtype)
     ]
     needs_grad = (
         not tracing
@@ -668,26 +849,38 @@ def _apply_op(name: str, fn: Callable, *tensors: Tensor,
                 for i in diffable)
     )
 
+    entry = None
+    if not tracing and _dispatch.is_enabled():
+        stats = _dispatch.dispatch_cache().stats
+        if not cacheable:
+            if static is not None:
+                stats.num_fallback_unhashable += 1
+            else:
+                stats.num_uncached += 1
+        else:
+            key = _dispatch.make_key(name, static, datas, needs_grad)
+            if key is None:
+                stats.num_fallback_unhashable += 1
+            else:
+                entry = _dispatch.dispatch_cache().get_or_create(
+                    key, fn, diffable, len(datas))
+
     if not needs_grad:
-        raw = fn(*datas)
+        raw = entry.fwd(*datas) if entry is not None else fn(*datas)
         return _wrap_outputs(raw, None)
 
-    if len(diffable) == len(datas):
-        out, vjp_fn = jax.vjp(fn, *datas)
-        inputs = list(tensors)
+    if entry is not None:
+        # warm path: jitted forward replay + jitted VJP replay closure
+        out = entry.fwd(*datas)
+        bwd = entry.bwd()
+        saved = tuple(datas)
+        vjp_fn = lambda cot: bwd(saved, cot)  # noqa: E731
+        inputs = (list(tensors) if len(diffable) == len(datas)
+                  else [tensors[i] for i in diffable])
     else:
-        # close over non-differentiable (integer/bool) operands
-        frozen = {i: d for i, d in enumerate(datas) if i not in diffable}
-
-        def fn_diff(*diff_args):
-            full = list(frozen.get(i) for i in range(len(datas)))
-            it = iter(diff_args)
-            for i in diffable:
-                full[i] = next(it)
-            return fn(*full)
-
-        out, vjp_fn = jax.vjp(fn_diff, *[datas[i] for i in diffable])
-        inputs = [tensors[i] for i in diffable]
+        out, vjp_fn = _dispatch.partial_vjp(fn, datas, diffable)
+        inputs = (list(tensors) if len(diffable) == len(datas)
+                  else [tensors[i] for i in diffable])
 
     node = Node(name, vjp_fn, inputs, num_outputs=num_outputs)
     outs = out if isinstance(out, tuple) else (out,)
@@ -704,60 +897,60 @@ def _apply_op(name: str, fn: Callable, *tensors: Tensor,
 def add(a, b):
     a = _coerce(a)
     b = _coerce(b, like=a)
-    return _apply_op("add", jnp.add, a, b)
+    return _apply_op("add", jnp.add, a, b, static=())
 
 
 def sub(a, b):
     a = _coerce(a)
     b = _coerce(b, like=a)
-    return _apply_op("sub", jnp.subtract, a, b)
+    return _apply_op("sub", jnp.subtract, a, b, static=())
 
 
 def mul(a, b):
     a = _coerce(a)
     b = _coerce(b, like=a)
-    return _apply_op("mul", jnp.multiply, a, b)
+    return _apply_op("mul", jnp.multiply, a, b, static=())
 
 
 def div(a, b):
     a = _coerce(a)
     b = _coerce(b, like=a)
-    return _apply_op("div", jnp.divide, a, b)
+    return _apply_op("div", jnp.divide, a, b, static=())
 
 
 def pow_(a, b):
     a = _coerce(a)
     b = _coerce(b, like=a)
-    return _apply_op("pow", jnp.power, a, b)
+    return _apply_op("pow", jnp.power, a, b, static=())
 
 
 def matmul(a, b):
     a = _coerce(a)
     b = _coerce(b, like=a)
-    return _apply_op("matmul", jnp.matmul, a, b)
+    return _apply_op("matmul", jnp.matmul, a, b, static=())
 
 
 def maximum(a, b):
     a, b = _coerce(a), _coerce(b)
-    return _apply_op("maximum", jnp.maximum, a, b)
+    return _apply_op("maximum", jnp.maximum, a, b, static=())
 
 
 def minimum(a, b):
     a, b = _coerce(a), _coerce(b)
-    return _apply_op("minimum", jnp.minimum, a, b)
+    return _apply_op("minimum", jnp.minimum, a, b, static=())
 
 
 def where(cond, a, b):
     cond = _coerce(cond)
     a = _coerce(a)
     b = _coerce(b, like=a)
-    return _apply_op("where", jnp.where, cond, a, b)
+    return _apply_op("where", jnp.where, cond, a, b, static=())
 
 
 def cat(tensors: Sequence[Tensor], dim: int = 0) -> Tensor:
     tensors = [_coerce(t) for t in tensors]
     return _apply_op("cat", lambda *xs: jnp.concatenate(xs, axis=dim),
-                     *tensors)
+                     *tensors, static=(dim,))
 
 
 concat = cat
@@ -765,7 +958,8 @@ concat = cat
 
 def stack(tensors: Sequence[Tensor], dim: int = 0) -> Tensor:
     tensors = [_coerce(t) for t in tensors]
-    return _apply_op("stack", lambda *xs: jnp.stack(xs, axis=dim), *tensors)
+    return _apply_op("stack", lambda *xs: jnp.stack(xs, axis=dim),
+                     *tensors, static=(dim,))
 
 
 def split(t: Tensor, size: int, dim: int = 0):
@@ -781,14 +975,15 @@ def split(t: Tensor, size: int, dim: int = 0):
 def einsum(subscripts: str, *tensors) -> Tensor:
     tensors = [_coerce(t) for t in tensors]
     return _apply_op("einsum",
-                     lambda *xs: jnp.einsum(subscripts, *xs), *tensors)
+                     lambda *xs: jnp.einsum(subscripts, *xs), *tensors,
+                     static=(subscripts,))
 
 
 def logsumexp(t: Tensor, dim=None, keepdim: bool = False) -> Tensor:
     return _apply_op(
         "logsumexp",
         lambda x: jax.scipy.special.logsumexp(x, axis=dim, keepdims=keepdim),
-        _coerce(t))
+        _coerce(t), static=(_hashable_axis(dim), keepdim))
 
 
 def exp(t):
@@ -820,18 +1015,19 @@ def softmax(t, dim: int = -1):
 
 
 def tril(t, k: int = 0):
-    return _apply_op("tril", lambda x: jnp.tril(x, k), _coerce(t))
+    return _apply_op("tril", lambda x: jnp.tril(x, k), _coerce(t),
+                     static=(k,))
 
 
 def triu(t, k: int = 0):
-    return _apply_op("triu", lambda x: jnp.triu(x, k), _coerce(t))
+    return _apply_op("triu", lambda x: jnp.triu(x, k), _coerce(t),
+                     static=(k,))
 
 
 def take_along_dim(t, indices, dim: int):
-    idx = _raw(indices)
     return _apply_op("take_along_dim",
-                     lambda x: jnp.take_along_axis(x, idx, axis=dim),
-                     _coerce(t))
+                     lambda x, i: jnp.take_along_axis(x, i, axis=dim),
+                     _coerce(t), _coerce(indices), static=(dim,))
 
 
 def one_hot(t, num_classes: int, dtype=jnp.float32):

@@ -25,6 +25,7 @@ import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FuturesTimeout
 from typing import (Any, Callable, Generic, Iterable, Iterator, List,
                     Optional, Sequence, TypeVar)
 
@@ -298,7 +299,8 @@ class DataLoader(Generic[T_co]):
                 # straggler mitigation: deadline + inline refetch
                 try:
                     batch = fut.result(timeout=self.worker_timeout_s)
-                except TimeoutError:
+                except (TimeoutError, _FuturesTimeout):
+                    # pre-3.11 futures.TimeoutError is not the builtin
                     self.straggler_events += 1
                     fut.cancel()
                     batch = self._fetch(indices)

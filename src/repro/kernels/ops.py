@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .decode_attention import decode_attention_fwd
@@ -185,3 +186,76 @@ def _mamba_bwd(res, g):
 
 
 mamba_scan.defvjp(_mamba_fwd, _mamba_bwd)
+
+
+# ----------------------------------------------------------------------
+# fused elementwise chain (the fusion-queue lowering target)
+# ----------------------------------------------------------------------
+
+_EW_SUBLANE = 8       # f32 sublane granularity
+_EW_BLOCK_ROWS = 256  # 256x128xf32 = 128KB per operand tile in VMEM
+
+
+def fused_elementwise(fn, *xs, interpret: Optional[bool] = None):
+    """Run an elementwise composite ``fn(*xs)`` as ONE Pallas kernel.
+
+    ``fn`` may return one array or a tuple (a fusion-queue chain
+    materializes every step output).  All operands and outputs must share
+    a shape; the composite is applied blockwise over a (rows, 128)
+    lane-major view of the raveled data — the padded tail goes through
+    ``fn`` and is sliced off (elementwise, so garbage in the pad never
+    contaminates real lanes).  Falls back to a plain call for
+    scalars/odd layouts.
+    """
+    from jax.experimental import pallas as pl
+
+    interpret = _interpret() if interpret is None else interpret
+    x0 = xs[0]
+    shape = x0.shape
+    n = int(np.prod(shape)) if shape else 1
+    out_avals = jax.eval_shape(fn, *xs)
+    single = not isinstance(out_avals, tuple)
+    outs = (out_avals,) if single else out_avals
+    if (n == 0 or any(x.shape != shape for x in xs)
+            or any(o.shape != shape for o in outs)):
+        return fn(*xs)
+
+    rows = -(-n // LANE)
+    block_rows = min(_EW_BLOCK_ROWS,
+                     -(-rows // _EW_SUBLANE) * _EW_SUBLANE)
+    rows_p = -(-rows // block_rows) * block_rows
+    pad = rows_p * LANE - n
+
+    def prep(x):
+        flat = x.reshape(-1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(rows_p, LANE)
+
+    n_in = len(xs)
+
+    def kernel(*refs):
+        vals = fn(*[r[...] for r in refs[:n_in]])
+        vals = (vals,) if not isinstance(vals, tuple) else vals
+        for out_ref, v in zip(refs[n_in:], vals):
+            out_ref[...] = v
+
+    grid = (rows_p // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    out2d = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * n_in,
+        out_specs=[spec] * len(outs),
+        out_shape=[jax.ShapeDtypeStruct((rows_p, LANE), o.dtype)
+                   for o in outs],
+        interpret=interpret,
+    )(*[prep(x) for x in xs])
+    result = tuple(o.reshape(-1)[:n].reshape(shape) for o in out2d)
+    return result[0] if single else result
+
+
+def make_fused_elementwise(fn):
+    """Dispatch-cache ``wrap`` hook: jitted Pallas lowering of an
+    elementwise composite (used by the fusion queue on TPU)."""
+    return jax.jit(functools.partial(fused_elementwise, fn))

@@ -86,17 +86,24 @@ def make_train_step(cfg: LM.LMConfig, mesh: Mesh, *,
                     grad_clip: float = 1.0, donate: bool = True,
                     batch_abs: Optional[Dict] = None,
                     accum_steps: int = 1,
+                    foreach: bool = False,
                     opt_kwargs: Optional[Dict] = None):
     """Returns (train_step_jit, state_shardings, abstract_state,
     batch_shardings_fn).  Pass ``batch_abs`` (ShapeDtypeStructs) so the
     batch input shardings are pinned at jit time (required for the
-    dry-run's .lower())."""
+    dry-run's .lower()).
+
+    ``foreach=True`` selects the fused multi-tensor optimizer update
+    (bucketed concat, one kernel per dtype bucket) — fewer HLO ops and
+    faster compiles on single-device/replicated meshes, but keep it off
+    when params are sharded (concat gathers across shards)."""
     opt_kwargs = dict(opt_kwargs or {})
     if optimizer == "adafactor":
         opt_kwargs.setdefault("lr", lr)
     else:
         opt_kwargs.setdefault("lr", lr)
-    init_opt, update_opt = make_optimizer(optimizer, **opt_kwargs)
+    init_opt, update_opt = make_optimizer(optimizer, foreach=foreach,
+                                          **opt_kwargs)
 
     params_abs = LM.abstract_params(cfg)
     opt_abs = jax.eval_shape(init_opt, params_abs)
@@ -210,6 +217,7 @@ def make_serve_step(cfg: LM.LMConfig, mesh: Mesh, *, batch: int,
 def train_loop(cfg: LM.LMConfig, *, steps: int, batch_size: int,
                seq_len: int, mesh: Optional[Mesh] = None,
                optimizer: str = "adamw", lr: float = 3e-4,
+               foreach: bool = False,
                checkpoint_dir: Optional[str] = None,
                checkpoint_every: int = 100,
                log_every: int = 10, seed: int = 0,
@@ -224,7 +232,8 @@ def train_loop(cfg: LM.LMConfig, *, steps: int, batch_size: int,
         mesh = make_local_mesh()
 
     step_fn, state_shardings, state_abs, batch_sharding_fn = \
-        make_train_step(cfg, mesh, optimizer=optimizer, lr=lr)
+        make_train_step(cfg, mesh, optimizer=optimizer, lr=lr,
+                        foreach=foreach)
 
     with mesh:
         params = jax.jit(

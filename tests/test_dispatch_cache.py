@@ -1,0 +1,330 @@
+"""Dispatch fast path: signature-keyed op/VJP cache, elementwise fusion
+queue, fused foreach optimizers."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.core import dispatch as D
+from repro.core import fuse as F
+from repro.core.autograd import no_grad
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    D.reset_dispatch_cache()
+    yield
+    D.reset_dispatch_cache()
+
+
+class TestDispatchCache:
+    def test_hit_miss_stats(self):
+        x = repro.randn(16, 16)
+        _ = x.exp()
+        s = repro.dispatch_cache_stats()
+        assert s["num_misses"] >= 1 and s["num_hits"] == 0
+        _ = x.exp()
+        s = repro.dispatch_cache_stats()
+        assert s["num_hits"] == 1
+        # different signature -> new entry, not a hit
+        _ = repro.randn(8, 8).exp()
+        s2 = repro.dispatch_cache_stats()
+        assert s2["num_misses"] == s["num_misses"] + 1
+        assert s2["num_entries"] == s2["num_misses"]
+
+    def test_grad_flag_and_statics_key(self):
+        x = repro.randn(4, 4, requires_grad=True)
+        y = repro.randn(4, 4)  # no grad
+        _ = x.exp()
+        _ = y.exp()  # same shapes, different grad flag -> distinct entry
+        assert repro.dispatch_cache_stats()["num_misses"] == 2
+        _ = x.sum(dim=0)
+        _ = x.sum(dim=1)  # static differs -> distinct entry
+        assert repro.dispatch_cache_stats()["num_misses"] == 4
+
+    def test_cached_vjp_matches_fresh_jax_vjp(self):
+        xd = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (32, 32), dtype=np.float32))
+        # fresh jax.vjp reference
+        f = lambda a: jnp.tanh(a * 2.0 + 1.0) * a  # noqa: E731
+        out_ref, vjp_ref = jax.vjp(f, xd)
+        cot = jnp.ones_like(out_ref)
+        (g_ref,) = vjp_ref(cot)
+
+        def run():
+            x = repro.Tensor(xd, requires_grad=True)
+            y = (x * 2.0 + 1.0).tanh() * x
+            y.backward(repro.Tensor(cot))
+            return np.asarray(y.data), np.asarray(x.grad.data)
+
+        y1, g1 = run()  # populates the cache (miss)
+        y2, g2 = run()  # replays cached fwd + vjp (hit)
+        assert repro.dispatch_cache_stats()["num_hits"] > 0
+        for y, g in ((y1, g1), (y2, g2)):
+            np.testing.assert_allclose(y, np.asarray(out_ref),
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(g, np.asarray(g_ref),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_unhashable_static_falls_back(self):
+        x = repro.randn(4, 4)
+        before = repro.dispatch_cache_stats()["num_fallback_unhashable"]
+        # advanced (array) indexing: no hashable static -> uncached path
+        idx = repro.tensor(np.array([0, 2]))
+        _ = x[idx]
+        s = repro.dispatch_cache_stats()
+        assert (s["num_uncached"] >= 1
+                or s["num_fallback_unhashable"] > before)
+
+    def test_tensor_valued_static_never_cached(self):
+        # a Tensor is hashable (by id) but must never key a cached
+        # closure: stale data would replay after mutation
+        from repro.core.tensor import _static_ok
+        t = repro.randn(())
+        assert not _static_ok((t,))
+        assert not _static_ok(t)
+        assert _static_ok((1, 2.0, None, "s", (3, jnp.float32)))
+        x = repro.randn(4, 4)
+        before = D.dispatch_cache_stats()["num_fallback_unhashable"]
+        with pytest.raises(TypeError):
+            _ = x.clamp(min=t)  # unsupported operand, but must not
+        s = D.dispatch_cache_stats()  # poison the cache on the way out
+        assert s["num_fallback_unhashable"] == before + 1
+        assert s["num_entries"] == 0
+
+    def test_bool_index_key_distinct_from_int(self):
+        # bool is an int subclass: x[True] must not replay x[1]'s entry
+        x = repro.tensor(np.arange(12).reshape(3, 4))
+        assert x[1].shape == (4,)
+        assert x[True].shape == (1, 3, 4)
+
+    def test_statics_keyed_by_type(self):
+        # 0 and 0.0 hash equal but bake different closures (promotion)
+        t = repro.tensor(np.arange(6, dtype=np.int32))
+        assert str(t.clamp(0, 1).dtype) == "int32"
+        assert str(t.clamp(0.0, 1.0).dtype) == "float32"
+
+    def test_cache_disabled_context(self):
+        x = repro.randn(4, 4)
+        with D.cache_disabled():
+            _ = x.exp()
+            _ = x.exp()
+        assert repro.dispatch_cache_stats()["num_entries"] == 0
+
+    def test_compile_unhashable_static_falls_back(self):
+        calls = []
+
+        @repro.compile(static_argnums=(1,))
+        def f(x, flag):
+            calls.append(1)
+            return x * 2.0 if flag else x
+
+        x = repro.randn(4)
+        before = repro.dispatch_cache_stats()["num_fallback_unhashable"]
+        with pytest.warns(UserWarning):
+            out = f(x, [1, 2])  # unhashable static -> eager fallback
+        assert isinstance(out, repro.Tensor)
+        assert repro.dispatch_cache_stats()["num_fallback_unhashable"] \
+            == before + 1
+
+
+class TestFusionQueue:
+    def test_chain_defers_and_flushes_once(self):
+        x = repro.randn(16, 16, requires_grad=True)
+        with F.fusion():
+            y = ((x * 2.0 + 1.0).tanh() * x).sigmoid()
+            assert y._pending is not None
+            got = np.asarray(y.numpy())  # materialization point
+        assert y._pending is None
+        xd = np.asarray(x.data)
+        ref = 1 / (1 + np.exp(-(np.tanh(xd * 2 + 1) * xd)))
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+        # whole chain = ONE fused cache entry
+        assert any(repro.dispatch_cache_stats()["num_entries"] >= 1
+                   for _ in [0])
+
+    def test_fused_backward_matches_eager(self):
+        xd = jnp.asarray(np.random.default_rng(1).standard_normal(
+            (16, 16), dtype=np.float32))
+        x1 = repro.Tensor(xd, requires_grad=True)
+        with F.fusion():
+            ((x1 * 3.0).exp() + x1).sum().backward()
+        x2 = repro.Tensor(xd, requires_grad=True)
+        ((x2 * 3.0).exp() + x2).sum().backward()
+        np.testing.assert_allclose(np.asarray(x1.grad.data),
+                                   np.asarray(x2.grad.data),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_intermediates_materialized_from_same_kernel(self):
+        x = repro.randn(8, requires_grad=True)
+        with F.fusion():
+            m = x * 3.0
+            z = m.exp()
+            (z.sum() + m.sum()).backward()
+        ref = np.exp(np.asarray(x.data) * 3) * 3 + 3
+        np.testing.assert_allclose(np.asarray(x.grad.data), ref,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_inplace_mutation_flushes_with_premutation_value(self):
+        a = repro.randn(8)
+        with F.fusion():
+            b = a * 3.0
+            expect = np.asarray(a.data) * 3.0
+            a.add_(1.0)  # mutation barrier: b flushed against old a
+            np.testing.assert_allclose(np.asarray(b.data), expect,
+                                       rtol=1e-6)
+
+    def test_version_counter_detects_mutation_before_backward(self):
+        w = repro.randn(8, requires_grad=True)
+        y = w * 2.0  # eager op: w saved with its version
+        with F.fusion():
+            z = y.exp()
+            z.numpy()  # flush records y's version in the fused node
+        y._version.bump()  # simulate an in-place mutation of the input
+        with pytest.raises(RuntimeError, match="inplace"):
+            z.sum().backward()
+
+    def test_no_grad_boundary_not_fused_through(self):
+        w = repro.randn(8, requires_grad=True)
+        with F.fusion():
+            with no_grad():
+                c = w * 2.0  # constant chain
+            y = c * w
+            y.sum().backward()
+        # dy/dw must treat c as a constant: grad == c, not 4w
+        np.testing.assert_allclose(np.asarray(w.grad.data),
+                                   np.asarray(c.data), rtol=1e-6)
+
+    def test_depth_cap_flushes(self):
+        x = repro.randn(4)
+        with F.fusion():
+            y = x
+            for _ in range(F.MAX_CHAIN_DEPTH + 2):
+                y = y + 1.0
+            # deep chains flush automatically; the value is right
+            np.testing.assert_allclose(
+                np.asarray(y.data),
+                np.asarray(x.data) + (F.MAX_CHAIN_DEPTH + 2),
+                rtol=1e-6)
+
+    def test_fusion_inside_jit_is_bypassed(self):
+        @repro.compile
+        def f(t):
+            with F.fusion():
+                return (t * 2.0).exp()
+
+        x = repro.randn(4)
+        out = f(x)
+        np.testing.assert_allclose(np.asarray(out.data),
+                                   np.exp(np.asarray(x.data) * 2),
+                                   rtol=1e-5)
+
+
+class TestFusedElementwiseKernel:
+    def test_pallas_interpret_matches_composite(self):
+        from repro.kernels.ops import fused_elementwise
+        a = jnp.asarray(np.random.default_rng(2).standard_normal(
+            (20, 15), dtype=np.float32))
+        b = jnp.full((20, 15), 0.5, jnp.float32)
+        fn = lambda p, q: (p * q, jnp.tanh(p * q) + q)  # noqa: E731
+        o1, o2 = fused_elementwise(fn, a, b, interpret=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(a) * 0.5,
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(
+            np.asarray(o2),
+            np.tanh(np.asarray(a) * 0.5) + 0.5, rtol=1e-5, atol=1e-6)
+
+
+class TestForeachOptimizers:
+    def _params(self, n2d=12, n1d=12):
+        repro.manual_seed(3)
+        return ([repro.randn(16, 8, requires_grad=True)
+                 for _ in range(n2d)]
+                + [repro.randn(8, requires_grad=True)
+                   for _ in range(n1d)])
+
+    def _run(self, opt_cls, foreach, steps=3, **kw):
+        import repro.optim as optim
+        ps = self._params()
+        opt = getattr(optim, opt_cls)(ps, foreach=foreach, **kw)
+        for s in range(steps):
+            rng = np.random.default_rng(s)
+            for p in ps:
+                p.grad = repro.Tensor(jnp.asarray(
+                    rng.standard_normal(p.shape, dtype=np.float32)))
+            opt.step()
+        return [np.asarray(p.data) for p in ps]
+
+    @pytest.mark.parametrize("opt_cls,kw", [
+        ("SGD", dict(lr=1e-2, momentum=0.9, nesterov=True,
+                     weight_decay=1e-4)),
+        ("Adam", dict(lr=1e-3)),
+        ("AdamW", dict(lr=1e-3, weight_decay=0.01)),
+        ("Adafactor", dict(lr=1e-2)),
+    ])
+    def test_foreach_equivalent_to_perleaf(self, opt_cls, kw):
+        fe = self._run(opt_cls, True, **kw)
+        pl = self._run(opt_cls, False, **kw)
+        for a, b in zip(fe, pl):
+            np.testing.assert_allclose(a, b, rtol=2e-6, atol=2e-7)
+
+    def test_staggered_grads_keep_perleaf_bias_correction(self):
+        import repro.optim as optim
+
+        def run(foreach):
+            repro.manual_seed(11)
+            p1 = repro.randn(8, requires_grad=True)
+            p2 = repro.randn(8, requires_grad=True)
+            opt = optim.Adam([p1, p2], lr=1e-2, foreach=foreach)
+            for s in range(6):
+                rng = np.random.default_rng(s)
+                p1.grad = repro.Tensor(jnp.asarray(
+                    rng.standard_normal(8).astype(np.float32)))
+                p2.grad = (repro.Tensor(jnp.asarray(
+                    rng.standard_normal(8).astype(np.float32)))
+                    if s >= 5 else None)  # p2 frozen for 5 steps
+                opt.step()
+            return (np.asarray(p1.data), np.asarray(p2.data),
+                    int(opt.state[id(p2)]["step"]))
+
+        a1, a2, st_f = run(True)
+        b1, b2, st_l = run(False)
+        np.testing.assert_allclose(a1, b1, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(a2, b2, rtol=1e-6, atol=1e-7)
+        assert st_f == st_l == 1
+
+    def test_state_dict_roundtrip_preserves_perleaf_state(self):
+        import repro.optim as optim
+        ps = self._params(4, 0)
+        opt = optim.AdamW(ps, lr=1e-3, foreach=True)
+        for p in ps:
+            p.grad = repro.Tensor(p.data * 0.1)
+        opt.step()
+        sd = opt.state_dict()
+        assert len(sd["state"]) == 4
+        assert all("m" in s and "v" in s and "step" in s
+                   for s in sd["state"])
+        opt2 = optim.AdamW(ps, lr=1e-3, foreach=True)
+        opt2.load_state_dict(sd)
+        assert int(opt2.state[id(ps[0])]["step"]) == 1
+
+    def test_functional_foreach_make_optimizer(self):
+        from repro.optim.functional import make_optimizer
+        rng = np.random.default_rng(0)
+        params = {"a": jnp.asarray(rng.standard_normal(
+            (8, 4), dtype=np.float32)),
+            "b": jnp.asarray(rng.standard_normal(4, dtype=np.float32))}
+        grads = jax.tree_util.tree_map(lambda p: p * 0.1, params)
+        for name in ("sgd", "adamw"):
+            init_r, upd_r = make_optimizer(name, lr=1e-2)
+            init_f, upd_f = make_optimizer(name, foreach=True, lr=1e-2)
+            s_r, s_f = init_r(params), init_f(params)
+            p_r, s_r = upd_r(grads, s_r, params)
+            p_f, s_f = upd_f(grads, s_f, params)
+            jax.tree_util.tree_map(
+                lambda a, b: np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-7),
+                p_r, p_f)
