@@ -2,10 +2,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench-smoke bench lint
+.PHONY: test gradcheck conformance bench-smoke bench lint
 
 test:
 	$(PY) -m pytest -x -q
+
+# the dispatch-cache gate: numeric gradients + kwarg-collision cases
+gradcheck:
+	$(PY) -m pytest -x -q tests/test_gradcheck.py
+
+# forward conformance of the F.* surface (cold/warm bitwise equality)
+conformance:
+	$(PY) -m pytest -x -q tests/test_functional_conformance.py
 
 bench-smoke:
 	mkdir -p benchmarks/out

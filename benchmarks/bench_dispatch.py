@@ -12,6 +12,10 @@ Sections:
   dispatch/foreach      — optimizer step on a 120-leaf param pytree:
       fused multi-tensor (bucketed concat, one jitted kernel) vs the
       per-leaf tree_map reference.  (acceptance: foreach beats per-leaf)
+  dispatch/mlp          — an F.*-layer chain: 3-layer MLP forward +
+      backward through nn.functional (linear/gelu/relu/mse), cold
+      (cache disabled, re-traced vjp per layer op) vs warm (every layer
+      op replays its cached entry).  (acceptance: warm >= 2x cold)
 
 Numbers land in the CSV stream and, with ``--json``, in a structured
 JSON record set via ``benchmarks.common.write_json``.
@@ -39,6 +43,9 @@ else:
 
 N = 512
 CHAIN_RESULTS = {}
+# per-section dispatch-cache snapshots: sections reset the global cache,
+# so the run-level stats only ever describe the last section
+SECTION_STATS = {}
 
 
 def _chain(x):
@@ -103,6 +110,7 @@ def bench_cold_vs_warm(iters: int) -> None:
     emit("dispatch/chain512/warm-wall", warm_wall,
          f"cached, synchronized, speedup={wall_speedup:.1f}x",
          mode="warm-wall", speedup=round(wall_speedup, 2))
+    SECTION_STATS["chain512"] = repro.dispatch_cache_stats()
 
 
 def bench_fusion(iters: int) -> None:
@@ -138,6 +146,7 @@ def bench_fusion(iters: int) -> None:
     emit("dispatch/fusion512/on", t_on,
          f"1 fused kernel, speedup={speedup:.1f}x",
          mode="on", speedup=round(speedup, 2))
+    SECTION_STATS["fusion512"] = repro.dispatch_cache_stats()
 
 
 def bench_foreach(iters: int) -> None:
@@ -173,15 +182,62 @@ def bench_foreach(iters: int) -> None:
          mode="foreach", leaves=120, speedup=round(speedup, 2))
 
 
+def bench_functional_mlp(iters: int) -> None:
+    """The nn.functional fast path: warm layer-op replay vs cold
+    re-trace for a full MLP forward + backward step."""
+    import repro.nn as nn
+    import repro.nn.functional as F
+
+    repro.manual_seed(7)
+    model = nn.Sequential(
+        nn.Linear(256, 256), nn.GELU(),
+        nn.Linear(256, 256), nn.ReLU(),
+        nn.Linear(256, 64))
+    params = list(model.parameters())
+    x = repro.randn(64, 256)
+    y = repro.randn(64, 64)
+
+    def step():
+        for p in params:
+            p.grad = None
+        loss = F.mse_loss(model(x), y)
+        loss.backward()
+        params[0].grad.data.block_until_ready()
+
+    with dispatch_mod.cache_disabled():
+        cold = timeit(step, warmup=1, iters=iters, stat="min")
+
+    dispatch_mod.reset_dispatch_cache()
+    step()  # populate
+    warm = timeit(step, warmup=2, iters=iters, stat="min")
+    stats = repro.dispatch_cache_stats()
+    speedup = cold / warm
+    CHAIN_RESULTS["mlp_cold_us"] = cold * 1e6
+    CHAIN_RESULTS["mlp_warm_us"] = warm * 1e6
+    CHAIN_RESULTS["mlp_warm_speedup"] = speedup
+    hygiene = (stats["num_uncached"] == 0
+               and stats["num_fallback_unhashable"] == 0)
+    emit("dispatch/mlp256/cold", cold,
+         "F.* fwd+bwd, retraced per layer op", mode="cold")
+    emit("dispatch/mlp256/warm", warm,
+         f"cached layer-op replay, speedup={speedup:.1f}x "
+         f"hygiene={'ok' if hygiene else 'VIOLATED'}",
+         mode="warm", speedup=round(speedup, 2),
+         uncached=stats["num_uncached"],
+         fallback_unhashable=stats["num_fallback_unhashable"])
+    SECTION_STATS["mlp256"] = stats
+
+
 def run(quick: bool = True, json_path: str = None) -> None:
     iters = 15 if quick else 40
     bench_cold_vs_warm(iters)
     bench_fusion(iters)
     bench_foreach(iters)
+    bench_functional_mlp(iters)
     if json_path:
         write_json(json_path, meta={
             "bench": "dispatch", "backend": jax.default_backend(),
-            "n": N, "cache_stats": repro.dispatch_cache_stats(),
+            "n": N, "cache_stats_by_section": SECTION_STATS,
         })
 
 

@@ -58,10 +58,15 @@ class DispatchCacheStats:
     num_uncached: int = 0              # no static descriptor supplied
     num_fallback_unhashable: int = 0   # statics present but unhashable
     num_evictions: int = 0             # wholesale clears on overflow
+    num_seeded: int = 0                # entries pre-created from jit traces
     num_entries: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
+
+
+_PER_OP_FIELDS = ("hits", "misses", "uncached", "fallback_unhashable",
+                  "seeded")
 
 
 # ----------------------------------------------------------------------
@@ -131,14 +136,26 @@ class DispatchCache:
         self._lock = threading.RLock()
         self._entries: Dict[Any, CacheEntry] = {}
         self.stats = DispatchCacheStats()
+        self._per_op: Dict[str, Dict[str, int]] = {}
+
+    def _op_rec(self, name: str) -> Dict[str, int]:
+        rec = self._per_op.get(name)
+        if rec is None:
+            rec = self._per_op[name] = dict.fromkeys(_PER_OP_FIELDS, 0)
+        return rec
 
     def get_or_create(self, key, fn: Callable, diffable: Sequence[int],
                       n_args: int,
                       wrap: Optional[Callable] = None) -> CacheEntry:
+        # every dispatch key leads with the op name (make_key contract) —
+        # the per-op breakdown that makes regressions attributable keys
+        # off it
+        name = key[0]
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
                 self.stats.num_hits += 1
+                self._op_rec(name)["hits"] += 1
                 return entry
             if len(self._entries) >= self.max_entries:
                 # runaway-signature backstop: wholesale clear, like
@@ -148,18 +165,54 @@ class DispatchCache:
             entry = CacheEntry(fn, diffable, n_args, wrap=wrap)
             self._entries[key] = entry
             self.stats.num_misses += 1
+            self._op_rec(name)["misses"] += 1
             self.stats.num_entries = len(self._entries)
             return entry
+
+    def seed_entry(self, key, fn: Callable, diffable: Sequence[int],
+                   n_args: int) -> None:
+        """Pre-create an entry (from a ``repro.compile`` trace) without
+        counting a miss: the first eager dispatch after the trace is then
+        already warm."""
+        with self._lock:
+            if key in self._entries:
+                return
+            if len(self._entries) >= self.max_entries:
+                self._entries.clear()
+                self.stats.num_evictions += 1
+            self._entries[key] = CacheEntry(fn, diffable, n_args)
+            self.stats.num_seeded += 1
+            self._op_rec(key[0])["seeded"] += 1
+            self.stats.num_entries = len(self._entries)
+
+    def record_uncached(self, name: str) -> None:
+        with self._lock:
+            self.stats.num_uncached += 1
+            self._op_rec(name)["uncached"] += 1
+
+    def record_fallback(self, name: str) -> None:
+        with self._lock:
+            self.stats.num_fallback_unhashable += 1
+            self._op_rec(name)["fallback_unhashable"] += 1
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self.stats = DispatchCacheStats()
+            self._per_op = {}
 
-    def memory_stats(self) -> Dict[str, int]:
+    def memory_stats(self) -> Dict[str, Any]:
         with self._lock:
             self.stats.num_entries = len(self._entries)
-            return self.stats.as_dict()
+            out: Dict[str, Any] = self.stats.as_dict()
+            per_op = {}
+            for name, rec in self._per_op.items():
+                warm = rec["hits"] + rec["misses"]
+                per_op[name] = dict(
+                    rec,
+                    hit_rate=(rec["hits"] / warm) if warm else 0.0)
+            out["per_op"] = per_op
+            return out
 
 
 _cache = DispatchCache()
@@ -195,12 +248,67 @@ class cache_disabled:
         set_enabled(self._prev)
 
 
-def dispatch_cache_stats() -> Dict[str, int]:
+def dispatch_cache_stats() -> Dict[str, Any]:
+    """Counter snapshot.  Besides the global counters, ``"per_op"`` maps
+    each op name to its own hits/misses/uncached/fallback_unhashable/
+    seeded counts plus a derived ``hit_rate`` — so a call site regressing
+    off the fast path is attributable to the op that did it."""
     return _cache.memory_stats()
 
 
 def reset_dispatch_cache() -> None:
     _cache.clear()
+
+
+# ----------------------------------------------------------------------
+# trace-time seeding (dispatch-cache-aware ``repro.compile``)
+# ----------------------------------------------------------------------
+
+_seed_tls = threading.local()
+
+
+def seeding_enabled() -> bool:
+    return getattr(_seed_tls, "on", False)
+
+
+class seeding:
+    """Context manager: while active, ops dispatched with tracer operands
+    (i.e. inside a ``jax.jit``/``repro.compile`` trace) *seed* dispatch
+    cache entries from their traced signatures instead of being invisible
+    to the cache.  A model traced once by ``repro.compile`` then starts
+    its eager life warm.  ``sink``, when given, collects seeded op names.
+    """
+
+    def __init__(self, enabled: bool = True, sink: Optional[list] = None):
+        self._enabled = enabled
+        self._sink = sink
+
+    def __enter__(self):
+        self._prev = (seeding_enabled(),
+                      getattr(_seed_tls, "sink", None))
+        _seed_tls.on = self._enabled
+        _seed_tls.sink = self._sink
+        return self
+
+    def __exit__(self, *exc):
+        _seed_tls.on, _seed_tls.sink = self._prev
+
+
+def seed_op(name: str, static, datas: Sequence[Any], fn: Callable,
+            diffable: Sequence[int]) -> None:
+    """Seed entries for one traced op.  Tracer avals carry concrete
+    shapes/dtypes, so the eager key is reconstructible; both grad-flag
+    keys are seeded (entry contents don't depend on the flag — it only
+    partitions the key space)."""
+    seeded = False
+    for grad in (False, True):
+        key = make_key(name, static, datas, grad)
+        if key is not None:
+            _cache.seed_entry(key, fn, diffable, len(datas))
+            seeded = True
+    sink = getattr(_seed_tls, "sink", None)
+    if seeded and sink is not None and name not in sink:
+        sink.append(name)
 
 
 # ----------------------------------------------------------------------

@@ -57,13 +57,22 @@ from .tensor import Storage, Tensor, _is_inexact, _is_tracer, _nbytes_of
 # ----------------------------------------------------------------------
 
 def compile(fn: Optional[Callable] = None, *, static_argnums=(),
-            donate_argnums=(), **jit_kwargs) -> Callable:
+            donate_argnums=(), seed_cache: bool = False,
+            **jit_kwargs) -> Callable:
     """Trace-and-fuse an eager function (models, train steps, ...).
 
     Works on any function whose tensor arguments are ``repro.Tensor`` /
     pytrees thereof.  Inside the trace the autograd tape is automatically
     disabled (operands are tracers); use :func:`value_and_grad` to compile
     a differentiated step.
+
+    ``seed_cache=True`` makes the compile dispatch-cache-aware: while the
+    function is being traced, every op dispatched with a ``static=``
+    descriptor *seeds* an eager dispatch-cache entry from its traced
+    signature (see ``dispatch.seeding``).  Tracing a model once then
+    leaves its eager ``F.*`` surface warm — and the seeded op names are
+    exposed on ``wrapper.seeded_ops`` with per-op hit rates available via
+    ``repro.dispatch_cache_stats()["per_op"]``.
 
     If a call hits jax's non-hashable-static-argument error the wrapper
     falls back to running ``fn`` eagerly (uncached) and bumps the dispatch
@@ -74,16 +83,22 @@ def compile(fn: Optional[Callable] = None, *, static_argnums=(),
         jitted = jax.jit(f, static_argnums=static_argnums,
                          donate_argnums=donate_argnums, **jit_kwargs)
         warned = []
+        seeded_ops: list = []
 
         @functools.wraps(f)
         def wrapper(*args, **kwargs):
             try:
+                if seed_cache:
+                    # the flag is thread-local and only consulted when f
+                    # is actually (re)traced; warm replays never enter
+                    # Python, so keeping it armed per call is free
+                    with _dispatch.seeding(sink=seeded_ops):
+                        return jitted(*args, **kwargs)
                 return jitted(*args, **kwargs)
             except (TypeError, ValueError) as e:
                 if "hashable" not in str(e):
                     raise
-                _dispatch.dispatch_cache().stats. \
-                    num_fallback_unhashable += 1
+                _dispatch.dispatch_cache().record_fallback("__compile__")
                 if not warned:
                     warned.append(True)
                     warnings.warn(
@@ -93,6 +108,7 @@ def compile(fn: Optional[Callable] = None, *, static_argnums=(),
                 return f(*args, **kwargs)
 
         wrapper._jitted = jitted  # expose for .lower()/.compile() tooling
+        wrapper.seeded_ops = seeded_ops  # op names seeded at trace time
         return wrapper
 
     if fn is not None:
@@ -156,12 +172,18 @@ def block_until_ready(tree: Any) -> Any:
 # ----------------------------------------------------------------------
 
 # Ops that are safe to defer and fuse: one output, elementwise (or
-# pure dtype-cast), no data-dependent shapes.
+# pure dtype-cast), no data-dependent shapes.  The second group is the
+# nn.functional activation surface — with their ``static=`` descriptors
+# in place they fuse across module boundaries (an MLP's
+# linear->act->linear chain defers the activations, not just raw-tensor
+# arithmetic).  softmax/log_softmax stay out: they reduce over an axis.
 ELEMENTWISE_OPS = frozenset({
     "add", "sub", "mul", "div", "pow", "mod", "neg", "abs", "clone",
     "astype", "exp", "log", "sqrt", "rsqrt", "sin", "cos", "tanh",
     "sigmoid", "relu", "erf", "clamp", "maximum", "minimum", "where",
     "masked_fill",
+    "relu6", "gelu", "silu", "softplus", "hardswish", "leaky_relu",
+    "elu", "dropout",
 })
 
 # Chains deeper than this flush eagerly — bounds pending-graph size and
@@ -425,7 +447,7 @@ def flush_tensor(t: Tensor) -> None:
     else:
         entry = None
         if key is None:
-            _dispatch.dispatch_cache().stats.num_fallback_unhashable += 1
+            _dispatch.dispatch_cache().record_fallback("__fused__")
         out_data = fused_fn(*ext_data)
 
     node = None

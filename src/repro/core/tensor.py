@@ -850,20 +850,25 @@ def _apply_op(name: str, fn: Callable, *tensors: Tensor,
     )
 
     entry = None
-    if not tracing and _dispatch.is_enabled():
-        stats = _dispatch.dispatch_cache().stats
+    if tracing:
+        # dispatch-cache-aware compile: a repro.compile(seed_cache=True)
+        # trace pre-creates eager entries from the traced signatures
+        if cacheable and _dispatch.seeding_enabled() \
+                and _dispatch.is_enabled():
+            _dispatch.seed_op(name, static, datas, fn, diffable)
+    elif _dispatch.is_enabled():
+        cache = _dispatch.dispatch_cache()
         if not cacheable:
             if static is not None:
-                stats.num_fallback_unhashable += 1
+                cache.record_fallback(name)
             else:
-                stats.num_uncached += 1
+                cache.record_uncached(name)
         else:
             key = _dispatch.make_key(name, static, datas, needs_grad)
             if key is None:
-                stats.num_fallback_unhashable += 1
+                cache.record_fallback(name)
             else:
-                entry = _dispatch.dispatch_cache().get_or_create(
-                    key, fn, diffable, len(datas))
+                entry = cache.get_or_create(key, fn, diffable, len(datas))
 
     if not needs_grad:
         raw = entry.fwd(*datas) if entry is not None else fn(*datas)

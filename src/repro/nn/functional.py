@@ -6,77 +6,93 @@ the eager dispatcher as a single tape node (its backward is the exact
 ``F.*`` with single fused ATen kernels rather than building them out of
 primitive tape nodes — and it keeps eager dispatch overhead at one node per
 layer-level op.
+
+Dispatch-cache contract (see ``core.dispatch``): every op passes a
+``static=`` tuple naming **every** kwarg its closure captures besides the
+tensor operands (``dim``, ``approximate``, ``eps``, strides, reduction
+mode, ...).  Repeated layer calls then replay cached jitted executables
+instead of re-tracing ``jax.vjp`` — and a forgotten capture would replay a
+stale closure with silently wrong results, which is exactly what
+``tests/test_functional_conformance.py`` and ``tests/test_gradcheck.py``
+exist to catch.  Array-valued values an op depends on (indices, targets,
+masks, running stats) are passed as *operands*, never closed over: a
+closed-over array would be baked stale into the cached executable.
+
+Op names are shared with the ``Tensor`` method surface where semantics
+coincide (``tanh``, ``sigmoid``, ``relu``, ``softmax``, ``log_softmax``)
+so both spellings hit one cache entry.
 """
 
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.tensor import Tensor, _apply_op, _coerce, _raw
+from ..core.tensor import Tensor, _apply_op, _coerce, _is_tracer, _raw
 
 # ----------------------------------------------------------------------
 # activations
 # ----------------------------------------------------------------------
 
 def relu(x: Tensor) -> Tensor:
-    return _apply_op("relu", jax.nn.relu, _coerce(x))
+    return _apply_op("relu", jax.nn.relu, _coerce(x), static=())
 
 
 def relu6(x: Tensor) -> Tensor:
-    return _apply_op("relu6", jax.nn.relu6, _coerce(x))
+    return _apply_op("relu6", jax.nn.relu6, _coerce(x), static=())
 
 
 def gelu(x: Tensor, approximate: str = "tanh") -> Tensor:
     return _apply_op(
         "gelu",
         lambda v: jax.nn.gelu(v, approximate=(approximate == "tanh")),
-        _coerce(x))
+        _coerce(x), static=(approximate,))
 
 
 def silu(x: Tensor) -> Tensor:
-    return _apply_op("silu", jax.nn.silu, _coerce(x))
+    return _apply_op("silu", jax.nn.silu, _coerce(x), static=())
 
 
 def sigmoid(x: Tensor) -> Tensor:
-    return _apply_op("sigmoid", jax.nn.sigmoid, _coerce(x))
+    return _apply_op("sigmoid", jax.nn.sigmoid, _coerce(x), static=())
 
 
 def tanh(x: Tensor) -> Tensor:
-    return _apply_op("tanh", jnp.tanh, _coerce(x))
+    return _apply_op("tanh", jnp.tanh, _coerce(x), static=())
 
 
 def softmax(x: Tensor, dim: int = -1) -> Tensor:
     return _apply_op("softmax", lambda v: jax.nn.softmax(v, axis=dim),
-                     _coerce(x))
+                     _coerce(x), static=(dim,))
 
 
 def log_softmax(x: Tensor, dim: int = -1) -> Tensor:
     return _apply_op("log_softmax",
-                     lambda v: jax.nn.log_softmax(v, axis=dim), _coerce(x))
+                     lambda v: jax.nn.log_softmax(v, axis=dim), _coerce(x),
+                     static=(dim,))
 
 
 def leaky_relu(x: Tensor, negative_slope: float = 0.01) -> Tensor:
     return _apply_op(
         "leaky_relu",
-        lambda v: jax.nn.leaky_relu(v, negative_slope), _coerce(x))
+        lambda v: jax.nn.leaky_relu(v, negative_slope), _coerce(x),
+        static=(negative_slope,))
 
 
 def elu(x: Tensor, alpha: float = 1.0) -> Tensor:
-    return _apply_op("elu", lambda v: jax.nn.elu(v, alpha), _coerce(x))
+    return _apply_op("elu", lambda v: jax.nn.elu(v, alpha), _coerce(x),
+                     static=(alpha,))
 
 
 def softplus(x: Tensor) -> Tensor:
-    return _apply_op("softplus", jax.nn.softplus, _coerce(x))
+    return _apply_op("softplus", jax.nn.softplus, _coerce(x), static=())
 
 
 def hardswish(x: Tensor) -> Tensor:
-    return _apply_op("hardswish", jax.nn.hard_swish, _coerce(x))
+    return _apply_op("hardswish", jax.nn.hard_swish, _coerce(x), static=())
 
 
 # ----------------------------------------------------------------------
@@ -87,15 +103,19 @@ def linear(x: Tensor, weight: Tensor, bias: Optional[Tensor] = None) -> Tensor:
     """y = x @ W^T + b  (torch layout: weight is (out, in))."""
     x, weight = _coerce(x), _coerce(weight)
     if bias is None:
-        return _apply_op("linear", lambda v, w: v @ w.T, x, weight)
+        return _apply_op("linear", lambda v, w: v @ w.T, x, weight,
+                         static=())
     return _apply_op("linear",
-                     lambda v, w, b: v @ w.T + b, x, weight, _coerce(bias))
+                     lambda v, w, b: v @ w.T + b, x, weight, _coerce(bias),
+                     static=())
 
 
 def embedding(indices: Tensor, weight: Tensor) -> Tensor:
-    idx = _raw(indices)
-    return _apply_op("embedding", lambda w: jnp.take(w, idx, axis=0),
-                     _coerce(weight))
+    # indices ride as an integer *operand* (non-diffable position), not a
+    # closure capture: new index values replay the same cached entry
+    return _apply_op("embedding",
+                     lambda w, i: jnp.take(w, i, axis=0),
+                     _coerce(weight), _coerce(indices), static=())
 
 
 # ----------------------------------------------------------------------
@@ -122,7 +142,7 @@ def layer_norm(x: Tensor, normalized_shape: Sequence[int],
         args.append(_coerce(weight))
         if bias is not None:
             args.append(_coerce(bias))
-    return _apply_op("layer_norm", _ln, *args)
+    return _apply_op("layer_norm", _ln, *args, static=(axes, eps))
 
 
 def rms_norm(x: Tensor, weight: Optional[Tensor] = None,
@@ -140,7 +160,7 @@ def rms_norm(x: Tensor, weight: Optional[Tensor] = None,
     args = [_coerce(x)]
     if weight is not None:
         args.append(_coerce(weight))
-    return _apply_op("rms_norm", _rms, *args)
+    return _apply_op("rms_norm", _rms, *args, static=(eps, offset))
 
 
 def batch_norm(x: Tensor, running_mean, running_var,
@@ -154,10 +174,9 @@ def batch_norm(x: Tensor, running_mean, running_var,
     shape = (1, x.shape[1]) + (1,) * (x.ndim - 2)
 
     if training:
-        batch_mean = jnp.mean(x.data, axis=reduce_axes)
-        batch_var = jnp.var(x.data, axis=reduce_axes)
-        if running_mean is not None and not isinstance(
-                x.data, jax.core.Tracer):
+        if running_mean is not None and not _is_tracer(x.data):
+            batch_mean = jnp.mean(x.data, axis=reduce_axes)
+            batch_var = jnp.var(x.data, axis=reduce_axes)
             running_mean._data = ((1 - momentum) * running_mean.data
                                   + momentum * batch_mean)
             running_var._data = ((1 - momentum) * running_var.data
@@ -174,11 +193,14 @@ def batch_norm(x: Tensor, running_mean, running_var,
                 if len(wb) > 1:
                     out = out + wb[1].reshape(shape)
             return out
-    else:
-        m = _raw(running_mean).reshape(shape)
-        var = _raw(running_var).reshape(shape)
 
-        def _bn(v, *wb):
+        args = [x]
+    else:
+        # eval mode: running stats are *operands* (they mutate across
+        # train steps — closing over them would cache stale values)
+        def _bn(v, m, var, *wb):
+            m = m.reshape(shape)
+            var = var.reshape(shape)
             out = (v - m) * jax.lax.rsqrt(var + eps)
             if wb:
                 out = out * wb[0].reshape(shape)
@@ -186,12 +208,13 @@ def batch_norm(x: Tensor, running_mean, running_var,
                     out = out + wb[1].reshape(shape)
             return out
 
-    args = [x]
+        args = [x, _coerce(running_mean), _coerce(running_var)]
+
     if weight is not None:
         args.append(_coerce(weight))
         if bias is not None:
             args.append(_coerce(bias))
-    return _apply_op("batch_norm", _bn, *args)
+    return _apply_op("batch_norm", _bn, *args, static=(training, eps))
 
 
 # ----------------------------------------------------------------------
@@ -227,7 +250,8 @@ def conv2d(x: Tensor, weight: Tensor, bias: Optional[Tensor] = None,
     args = [_coerce(x), _coerce(weight)]
     if bias is not None:
         args.append(_coerce(bias))
-    return _apply_op("conv2d", _conv, *args)
+    return _apply_op("conv2d", _conv, *args,
+                     static=(stride, pad, dilation, groups))
 
 
 def conv1d(x: Tensor, weight: Tensor, bias: Optional[Tensor] = None,
@@ -245,7 +269,8 @@ def conv1d(x: Tensor, weight: Tensor, bias: Optional[Tensor] = None,
     args = [_coerce(x), _coerce(weight)]
     if bias is not None:
         args.append(_coerce(bias))
-    return _apply_op("conv1d", _conv, *args)
+    return _apply_op("conv1d", _conv, *args,
+                     static=(stride, padding, dilation, groups))
 
 
 def max_pool2d(x: Tensor, kernel_size, stride=None, padding=0) -> Tensor:
@@ -260,7 +285,7 @@ def max_pool2d(x: Tensor, kernel_size, stride=None, padding=0) -> Tensor:
             window_strides=(1, 1) + s,
             padding=((0, 0), (0, 0), (p[0], p[0]), (p[1], p[1])))
 
-    return _apply_op("max_pool2d", _pool, _coerce(x))
+    return _apply_op("max_pool2d", _pool, _coerce(x), static=(k, s, p))
 
 
 def avg_pool2d(x: Tensor, kernel_size, stride=None, padding=0) -> Tensor:
@@ -276,7 +301,7 @@ def avg_pool2d(x: Tensor, kernel_size, stride=None, padding=0) -> Tensor:
             padding=((0, 0), (0, 0), (p[0], p[0]), (p[1], p[1])))
         return summed / (k[0] * k[1])
 
-    return _apply_op("avg_pool2d", _pool, _coerce(x))
+    return _apply_op("avg_pool2d", _pool, _coerce(x), static=(k, s, p))
 
 
 def adaptive_avg_pool2d(x: Tensor, output_size) -> Tensor:
@@ -293,7 +318,8 @@ def adaptive_avg_pool2d(x: Tensor, output_size) -> Tensor:
         # flexibility; torch uses overlapping windows here)
         return jax.image.resize(v, (n, c, out[0], out[1]), method="linear")
 
-    return _apply_op("adaptive_avg_pool2d", _pool, _coerce(x))
+    return _apply_op("adaptive_avg_pool2d", _pool, _coerce(x),
+                     static=(out,))
 
 
 # ----------------------------------------------------------------------
@@ -309,7 +335,7 @@ def dropout(x: Tensor, p: float = 0.5, training: bool = True,
         return _coerce(x)
     x = _coerce(x)
     if rng is None:
-        if isinstance(x.data, jax.core.Tracer):
+        if x._pending is None and _is_tracer(x._d):
             raise RuntimeError(
                 "dropout under jit requires an explicit `rng` key "
                 "(pass rng=jax.random.key(...)); eager mode draws from the "
@@ -319,7 +345,8 @@ def dropout(x: Tensor, p: float = 0.5, training: bool = True,
     else:
         mask = jax.random.bernoulli(rng, 1.0 - p, x.shape).astype(x.dtype)
     scale = 1.0 / (1.0 - p)
-    return _apply_op("dropout", lambda v, m: v * m * scale, x, Tensor(mask))
+    return _apply_op("dropout", lambda v, m: v * m * scale, x, Tensor(mask),
+                     static=(p,))
 
 
 # ----------------------------------------------------------------------
@@ -331,9 +358,8 @@ def cross_entropy(logits: Tensor, target: Tensor,
                   label_smoothing: float = 0.0,
                   reduction: str = "mean") -> Tensor:
     """Softmax cross-entropy with integer targets (torch semantics)."""
-    tgt = _raw(target)
 
-    def _ce(lg):
+    def _ce(lg, tgt):
         lg32 = lg.astype(jnp.float32)
         logp = jax.nn.log_softmax(lg32, axis=-1)
         n_cls = lg.shape[-1]
@@ -353,14 +379,13 @@ def cross_entropy(logits: Tensor, target: Tensor,
             return loss.sum()
         return loss.reshape(tgt.shape)
 
-    return _apply_op("cross_entropy", _ce, _coerce(logits))
+    return _apply_op("cross_entropy", _ce, _coerce(logits), _coerce(target),
+                     static=(ignore_index, label_smoothing, reduction))
 
 
 def nll_loss(log_probs: Tensor, target: Tensor,
              reduction: str = "mean") -> Tensor:
-    tgt = _raw(target)
-
-    def _nll(lp):
+    def _nll(lp, tgt):
         picked = jnp.take_along_axis(
             lp.reshape(-1, lp.shape[-1]),
             tgt.reshape(-1)[:, None], axis=-1)[:, 0]
@@ -371,7 +396,8 @@ def nll_loss(log_probs: Tensor, target: Tensor,
             return loss.sum()
         return loss.reshape(tgt.shape)
 
-    return _apply_op("nll_loss", _nll, _coerce(log_probs))
+    return _apply_op("nll_loss", _nll, _coerce(log_probs), _coerce(target),
+                     static=(reduction,))
 
 
 def mse_loss(input: Tensor, target: Tensor, reduction: str = "mean") -> Tensor:
@@ -383,7 +409,8 @@ def mse_loss(input: Tensor, target: Tensor, reduction: str = "mean") -> Tensor:
             return d.sum()
         return d
 
-    return _apply_op("mse_loss", _mse, _coerce(input), _coerce(target))
+    return _apply_op("mse_loss", _mse, _coerce(input), _coerce(target),
+                     static=(reduction,))
 
 
 def binary_cross_entropy_with_logits(input: Tensor, target: Tensor,
@@ -396,7 +423,8 @@ def binary_cross_entropy_with_logits(input: Tensor, target: Tensor,
             return loss.sum()
         return loss
 
-    return _apply_op("bce_logits", _bce, _coerce(input), _coerce(target))
+    return _apply_op("bce_logits", _bce, _coerce(input), _coerce(target),
+                     static=(reduction,))
 
 
 # ----------------------------------------------------------------------
@@ -414,10 +442,20 @@ def scaled_dot_product_attention(q: Tensor, k: Tensor, v: Tensor,
     masking.  ``backend='pallas'`` routes to the flash kernel."""
     from ..models import attention as _attn
 
-    mask = _raw(attn_mask) if attn_mask is not None else None
-    fn = partial(_attn.sdpa, is_causal=is_causal, scale=scale,
-                 window=window, mask=mask, backend=backend)
-    return _apply_op("sdpa", fn, _coerce(q), _coerce(k), _coerce(v))
+    static = (is_causal, scale, window, backend)
+    if attn_mask is None:
+        fn = lambda qd, kd, vd: _attn.sdpa(  # noqa: E731
+            qd, kd, vd, is_causal=is_causal, scale=scale, window=window,
+            mask=None, backend=backend)
+        return _apply_op("sdpa", fn, _coerce(q), _coerce(k), _coerce(v),
+                         static=static)
+    # the mask is an operand, not a closure capture: attention masks
+    # change per batch while shapes stay fixed
+    fn = lambda qd, kd, vd, md: _attn.sdpa(  # noqa: E731
+        qd, kd, vd, is_causal=is_causal, scale=scale, window=window,
+        mask=md, backend=backend)
+    return _apply_op("sdpa", fn, _coerce(q), _coerce(k), _coerce(v),
+                     _coerce(attn_mask), static=static)
 
 
 # handy aliases matching torch.nn.functional
@@ -428,8 +466,10 @@ def pad(x: Tensor, padding: Sequence[int], value: float = 0.0) -> Tensor:
     for i in range(len(padding) // 2):
         dim = x.ndim - 1 - i
         pads[dim] = (padding[2 * i], padding[2 * i + 1])
+    pads = tuple(pads)
     return _apply_op("pad",
-                     lambda v: jnp.pad(v, pads, constant_values=value), x)
+                     lambda v: jnp.pad(v, pads, constant_values=value), x,
+                     static=(pads, value))
 
 
 def one_hot(x: Tensor, num_classes: int) -> Tensor:
@@ -442,4 +482,4 @@ def normalize(x: Tensor, p: float = 2.0, dim: int = -1,
         n = jnp.linalg.norm(v, ord=p, axis=dim, keepdims=True)
         return v / jnp.maximum(n, eps)
 
-    return _apply_op("normalize", _norm, _coerce(x))
+    return _apply_op("normalize", _norm, _coerce(x), static=(p, dim, eps))

@@ -133,8 +133,13 @@ class Conv2d(Module):
         super().__init__()
         k = (kernel_size, kernel_size) if isinstance(kernel_size, int) \
             else tuple(kernel_size)
-        self.stride, self.padding = stride, padding
-        self.dilation, self.groups = dilation, groups
+        # canonicalize at construction: every forward then passes
+        # identical static descriptors (one dispatch-cache key per layer
+        # config, whether the user wrote `stride=1` or `stride=(1, 1)`)
+        self.stride = F._pair(stride)
+        self.padding = padding if isinstance(padding, str) \
+            else F._pair(padding)
+        self.dilation, self.groups = F._pair(dilation), groups
         fan_in = in_channels // groups * k[0] * k[1]
         self.weight = Parameter(_kaiming_uniform(
             (out_channels, in_channels // groups, k[0], k[1]), fan_in, dtype))

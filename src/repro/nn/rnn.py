@@ -81,8 +81,11 @@ class LSTM(Module):
         args = [x, w_ih, w_hh, b]
         if h0c0 is not None:
             args += [h0c0[0], h0c0[1]]
+        # closure captures: hidden size + direction (presence of an
+        # initial state changes the operand count, so the signature
+        # already distinguishes it)
         return _apply_op("lstm", _scan, *[_coerce(a) for a in args],
-                         num_outputs=3)
+                         num_outputs=3, static=(hidden, reverse))
 
     def forward(self, x: Tensor, state=None):
         h_states, c_states = [], []
@@ -134,5 +137,6 @@ class LSTMCell(Module):
             "lstm_cell",
             lambda xd, hd, cd, wi, wh, b: _lstm_cell(xd, hd, cd, wi, wh, b),
             _coerce(x), _coerce(h), _coerce(c),
-            self.weight_ih, self.weight_hh, self.bias, num_outputs=2)
+            self.weight_ih, self.weight_hh, self.bias, num_outputs=2,
+            static=())
         return out

@@ -1,0 +1,379 @@
+"""Numeric gradient checking for the ``nn.functional`` surface.
+
+``gradcheck(fn, inputs)`` compares the tape's ``backward()`` against a
+central-difference numeric vJp.  Because every ``F.*`` op replays a
+*cached* jitted VJP after its first dispatch, this suite is the gradient
+half of the dispatch-cache gate: a ``static=`` tuple missing a closure
+capture produces *silently wrong gradients* (same op name + same shapes
++ forgotten kwarg = stale entry replayed with the wrong closure), and
+the kwarg-collision tests below are built to trip exactly that.
+
+Method: with a fixed random cotangent ``v``, ``backward(v)`` yields
+``v^T J`` per input; the numeric side perturbs each input element by
+``±eps`` and differences ``<f(x), v>``.  One backward + 2·numel cached
+forward replays per input — cheap, and itself a cache stress test (every
+perturbation shares one dispatch signature).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+import repro.nn.functional as F
+from repro.core import dispatch as D
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    D.reset_dispatch_cache()
+    yield
+    D.reset_dispatch_cache()
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _randn(*shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        _rng(seed).standard_normal(shape, dtype=np.float32) * scale)
+
+
+def _randn_away_from(kinks, *shape, seed=0, margin=0.08):
+    """Standard normals pushed ``margin`` away from each kink point, so
+    central differences of piecewise-linear ops never straddle one."""
+    a = _rng(seed).standard_normal(shape).astype(np.float64)
+    for k in kinks:
+        near = np.abs(a - k) < margin
+        a = np.where(near, k + np.sign(a - k + 1e-12) * margin, a)
+    return jnp.asarray(a.astype(np.float32))
+
+
+def _distinct_grid(*shape, seed=0, step=0.1):
+    """All-distinct values (gaps >= step): argmax selections in pooling
+    stay stable under +-eps perturbation."""
+    n = int(np.prod(shape))
+    vals = _rng(seed).permutation(n).astype(np.float32) * step
+    return jnp.asarray(vals.reshape(shape))
+
+
+def gradcheck(fn, inputs, eps=1e-2, rtol=5e-2, atol=1e-2, seed=123):
+    """Check ``backward()`` of ``fn(*inputs)`` against central differences.
+
+    ``fn`` maps repro Tensors to one Tensor; ``inputs`` are raw arrays.
+    Returns True, or raises AssertionError naming the offending input.
+    """
+    tensors = [repro.Tensor(a, requires_grad=True) for a in inputs]
+    out = fn(*tensors)
+    cot = _rng(seed).standard_normal(out.shape).astype(np.float32)
+    out.backward(repro.Tensor(jnp.asarray(cot)))
+    analytic = [
+        np.zeros(t.shape, np.float64) if t.grad is None
+        else np.asarray(t.grad.data, dtype=np.float64)
+        for t in tensors
+    ]
+
+    def eval_dot(arrays):
+        with repro.no_grad():
+            o = fn(*[repro.Tensor(a) for a in arrays])
+        return float(np.vdot(np.asarray(o.data, dtype=np.float64), cot))
+
+    arrays = [np.asarray(a, dtype=np.float64) for a in inputs]
+    for ai, a in enumerate(arrays):
+        numeric = np.zeros(a.size, np.float64)
+        flat = a.ravel()
+        for i in range(a.size):
+            orig = flat[i]
+            flat[i] = orig + eps
+            plus = eval_dot([jnp.asarray(x, dtype=jnp.float32)
+                             for x in arrays])
+            flat[i] = orig - eps
+            minus = eval_dot([jnp.asarray(x, dtype=jnp.float32)
+                              for x in arrays])
+            flat[i] = orig
+            numeric[i] = (plus - minus) / (2 * eps)
+        np.testing.assert_allclose(
+            numeric.reshape(a.shape), analytic[ai], rtol=rtol, atol=atol,
+            err_msg=f"input {ai}: analytic vjp disagrees with "
+                    f"central differences")
+    return True
+
+
+# ----------------------------------------------------------------------
+# the differentiable F.* surface
+# ----------------------------------------------------------------------
+
+GRAD_CASES = {
+    "relu": lambda: gradcheck(
+        F.relu, [_randn_away_from((0.0,), 4, 5, seed=1)]),
+    "relu6": lambda: gradcheck(
+        F.relu6, [_randn_away_from((0.0, 6.0), 4, 5, seed=2, margin=0.1)]),
+    "leaky_relu": lambda: gradcheck(
+        lambda t: F.leaky_relu(t, 0.2),
+        [_randn_away_from((0.0,), 4, 5, seed=3)]),
+    "elu": lambda: gradcheck(
+        lambda t: F.elu(t, alpha=1.5), [_randn(4, 5, seed=4)]),
+    "gelu_tanh": lambda: gradcheck(
+        lambda t: F.gelu(t, "tanh"), [_randn(4, 5, seed=5)]),
+    "gelu_none": lambda: gradcheck(
+        lambda t: F.gelu(t, "none"), [_randn(4, 5, seed=6)]),
+    "silu": lambda: gradcheck(F.silu, [_randn(4, 5, seed=7)]),
+    "sigmoid": lambda: gradcheck(F.sigmoid, [_randn(4, 5, seed=8)]),
+    "tanh": lambda: gradcheck(F.tanh, [_randn(4, 5, seed=9)]),
+    "softplus": lambda: gradcheck(F.softplus, [_randn(4, 5, seed=10)]),
+    "hardswish": lambda: gradcheck(
+        F.hardswish,
+        [_randn_away_from((-3.0, 3.0), 4, 5, seed=11, margin=0.1)]),
+    "softmax": lambda: gradcheck(
+        lambda t: F.softmax(t, dim=-1), [_randn(3, 6, seed=12)]),
+    "softmax_dim0": lambda: gradcheck(
+        lambda t: F.softmax(t, dim=0), [_randn(3, 6, seed=12)]),
+    "log_softmax": lambda: gradcheck(
+        lambda t: F.log_softmax(t, dim=-1), [_randn(3, 6, seed=13)]),
+    "linear": lambda: gradcheck(
+        F.linear, [_randn(3, 4, seed=14), _randn(2, 4, seed=15),
+                   _randn(2, seed=16)]),
+    "embedding": lambda: gradcheck(
+        lambda w: F.embedding(
+            repro.Tensor(jnp.asarray([[0, 2], [3, 1]])), w),
+        [_randn(5, 3, seed=17)]),
+    "layer_norm": lambda: gradcheck(
+        lambda x, w, b: F.layer_norm(x, (6,), w, b),
+        [_randn(3, 6, seed=18), _randn(6, seed=19), _randn(6, seed=20)]),
+    "rms_norm": lambda: gradcheck(
+        lambda x, w: F.rms_norm(x, w, offset=1.0),
+        [_randn(3, 6, seed=21), _randn(6, seed=22)]),
+    "batch_norm_train": lambda: gradcheck(
+        lambda x, w, b: F.batch_norm(x, None, None, w, b, training=True),
+        [_randn(2, 3, 4, 4, seed=23), _randn(3, seed=24),
+         _randn(3, seed=25)], eps=2e-2, rtol=8e-2, atol=2e-2),
+    "batch_norm_eval": lambda: gradcheck(
+        lambda x, w, b: F.batch_norm(
+            x, repro.Tensor(_randn(3, seed=26) * 0.1),
+            repro.Tensor(jnp.abs(_randn(3, seed=27)) + 0.5),
+            w, b, training=False),
+        [_randn(2, 3, 4, 4, seed=28), _randn(3, seed=29),
+         _randn(3, seed=30)]),
+    "conv2d": lambda: gradcheck(
+        lambda x, w, b: F.conv2d(x, w, b, stride=2, padding=1),
+        [_randn(1, 2, 6, 6, seed=31), _randn(2, 2, 3, 3, seed=32),
+         _randn(2, seed=33)]),
+    "conv1d": lambda: gradcheck(
+        lambda x, w: F.conv1d(x, w, padding=1),
+        [_randn(1, 2, 8, seed=34), _randn(3, 2, 3, seed=35)]),
+    "max_pool2d": lambda: gradcheck(
+        lambda x: F.max_pool2d(x, 2),
+        [_distinct_grid(1, 2, 6, 6, seed=36)]),
+    "avg_pool2d": lambda: gradcheck(
+        lambda x: F.avg_pool2d(x, 2), [_randn(1, 2, 6, 6, seed=37)]),
+    "adaptive_avg_pool2d": lambda: gradcheck(
+        lambda x: F.adaptive_avg_pool2d(x, 2),
+        [_randn(1, 2, 6, 6, seed=38)]),
+    "dropout": lambda: gradcheck(
+        lambda x: F.dropout(x, p=0.25, rng=jax.random.key(3)),
+        [_randn(5, 5, seed=39)]),
+    "cross_entropy": lambda: gradcheck(
+        lambda lg: F.cross_entropy(
+            lg, repro.Tensor(jnp.asarray([1, 3, -100, 0])),
+            label_smoothing=0.1),
+        [_randn(4, 6, seed=40)]),
+    "nll_loss": lambda: gradcheck(
+        lambda lp: F.nll_loss(
+            lp, repro.Tensor(jnp.asarray([1, 3, 0]))),
+        [_randn(3, 6, seed=41)]),
+    "mse_loss": lambda: gradcheck(
+        F.mse_loss, [_randn(3, 4, seed=42), _randn(3, 4, seed=43)]),
+    "bce_logits": lambda: gradcheck(
+        lambda lg, t: F.binary_cross_entropy_with_logits(lg, t),
+        [_randn(3, 4, seed=44),
+         jnp.abs(_randn(3, 4, seed=45)) % 1.0]),
+    "sdpa": lambda: gradcheck(
+        lambda q, k, v: F.scaled_dot_product_attention(
+            q, k, v, is_causal=True),
+        [_randn(1, 1, 4, 3, seed=46), _randn(1, 1, 4, 3, seed=47),
+         _randn(1, 1, 4, 3, seed=48)]),
+    "pad": lambda: gradcheck(
+        lambda x: F.pad(x, (1, 1), value=0.5), [_randn(3, 4, seed=49)]),
+    "normalize": lambda: gradcheck(
+        lambda x: F.normalize(x, dim=-1), [_randn(3, 4, seed=50)]),
+}
+
+
+@pytest.mark.parametrize("case", sorted(GRAD_CASES))
+def test_gradcheck(case):
+    assert GRAD_CASES[case]()
+
+
+def test_gradcheck_warm_replay_matches_cold():
+    """The SAME gradcheck run twice: the second pass replays cached
+    jitted VJPs for every op, so it double-checks the warm path."""
+    x = _randn(3, 6, seed=60)
+    assert gradcheck(lambda t: F.softmax(t, dim=-1), [x])
+    hits_before = repro.dispatch_cache_stats()["num_hits"]
+    assert gradcheck(lambda t: F.softmax(t, dim=-1), [x])
+    assert repro.dispatch_cache_stats()["num_hits"] > hits_before
+
+
+# ----------------------------------------------------------------------
+# kwarg-collision cases: same op name, same operand shapes, different
+# closure kwargs.  If any one ``static=`` tuple is emptied these replay
+# a stale entry and fail loudly.
+# ----------------------------------------------------------------------
+
+class TestKwargCollisions:
+    def test_softmax_dim_collision(self):
+        x = repro.Tensor(_randn(4, 4, seed=70), requires_grad=True)
+        a = F.softmax(x, dim=0)
+        b = F.softmax(x, dim=-1)
+        np.testing.assert_allclose(
+            np.asarray(a.data), np.asarray(jax.nn.softmax(x.data, axis=0)),
+            rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(b.data),
+            np.asarray(jax.nn.softmax(x.data, axis=-1)), rtol=1e-6)
+
+    def test_softmax_dim_collision_gradients(self):
+        # the VJP entry is keyed by the same signature: a dropped static
+        # would replay dim=0's backward for the dim=-1 call
+        xd = _randn(4, 4, seed=71)
+        _ = F.softmax(repro.Tensor(xd, requires_grad=True), dim=0) \
+            .sum().backward()
+        x = repro.Tensor(xd, requires_grad=True)
+        (F.softmax(x, dim=-1) * repro.Tensor(xd)).sum().backward()
+        ref = jax.grad(
+            lambda v: (jax.nn.softmax(v, axis=-1) * xd).sum())(xd)
+        np.testing.assert_allclose(np.asarray(x.grad.data),
+                                   np.asarray(ref), rtol=1e-4, atol=1e-6)
+
+    def test_gelu_approximate_collision(self):
+        xd = _randn(4, 4, seed=72)
+        a = F.gelu(repro.Tensor(xd), "tanh")
+        b = F.gelu(repro.Tensor(xd), "none")
+        np.testing.assert_allclose(
+            np.asarray(a.data),
+            np.asarray(jax.nn.gelu(xd, approximate=True)), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(b.data),
+            np.asarray(jax.nn.gelu(xd, approximate=False)), rtol=1e-6)
+        assert not np.allclose(np.asarray(a.data), np.asarray(b.data),
+                               rtol=1e-6, atol=1e-7)
+
+    def test_leaky_relu_slope_collision(self):
+        xd = _randn(4, 4, seed=73)
+        a = F.leaky_relu(repro.Tensor(xd), 0.01)
+        b = F.leaky_relu(repro.Tensor(xd), 0.5)
+        np.testing.assert_allclose(
+            np.asarray(a.data), np.asarray(jax.nn.leaky_relu(xd, 0.01)),
+            rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(b.data), np.asarray(jax.nn.leaky_relu(xd, 0.5)),
+            rtol=1e-6)
+
+    def test_elu_alpha_collision(self):
+        xd = _randn(4, 4, seed=74)
+        for alpha in (1.0, 2.0):
+            got = F.elu(repro.Tensor(xd), alpha=alpha)
+            np.testing.assert_allclose(
+                np.asarray(got.data), np.asarray(jax.nn.elu(xd, alpha)),
+                rtol=1e-6)
+
+    def test_norm_eps_collision(self):
+        xd = _randn(3, 6, seed=75)
+        for eps in (1e-6, 0.5):
+            got = F.rms_norm(repro.Tensor(xd), eps=eps)
+            var = jnp.mean(jnp.square(xd), axis=-1, keepdims=True)
+            np.testing.assert_allclose(
+                np.asarray(got.data),
+                np.asarray(xd * jax.lax.rsqrt(var + eps)), rtol=1e-6)
+
+    def test_conv2d_padding_dilation_collision(self):
+        # padding=1/dilation=1 and padding=2/dilation=2 give the SAME
+        # output shape for a 3x3 kernel: only the statics tell them apart
+        xd, wd = _randn(1, 2, 8, 8, seed=76), _randn(2, 2, 3, 3, seed=77)
+
+        def ref(pad, dil):
+            return jax.lax.conv_general_dilated(
+                xd, wd, (1, 1), ((pad, pad), (pad, pad)),
+                rhs_dilation=(dil, dil),
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+        a = F.conv2d(repro.Tensor(xd), repro.Tensor(wd), padding=1)
+        b = F.conv2d(repro.Tensor(xd), repro.Tensor(wd), padding=2,
+                     dilation=2)
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a.data),
+                                   np.asarray(ref(1, 1)), rtol=2e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(b.data),
+                                   np.asarray(ref(2, 2)), rtol=2e-5,
+                                   atol=1e-6)
+
+    def test_cross_entropy_kwarg_collisions(self):
+        lg = _randn(5, 7, seed=78)
+        tgt = jnp.asarray([1, 2, 3, 4, 5])
+        mean = F.cross_entropy(repro.Tensor(lg), repro.Tensor(tgt))
+        summed = F.cross_entropy(repro.Tensor(lg), repro.Tensor(tgt),
+                                 reduction="sum")
+        np.testing.assert_allclose(float(summed.item()),
+                                   float(mean.item()) * 5, rtol=1e-5)
+        smooth = F.cross_entropy(repro.Tensor(lg), repro.Tensor(tgt),
+                                 label_smoothing=0.2)
+        assert not np.isclose(float(smooth.item()), float(mean.item()))
+        ignored = F.cross_entropy(repro.Tensor(lg),
+                                  repro.Tensor(jnp.asarray([1, 2, 3, 4, 1])),
+                                  ignore_index=1)
+        assert not np.isclose(float(ignored.item()), float(mean.item()))
+
+    def test_dropout_p_collision(self):
+        xd = jnp.ones((64, 64), jnp.float32)
+        key = jax.random.key(11)
+        for p in (0.25, 0.5):
+            got = np.asarray(F.dropout(repro.Tensor(xd), p=p,
+                                       rng=key).data)
+            mask = np.asarray(jax.random.bernoulli(key, 1.0 - p,
+                                                   (64, 64)))
+            np.testing.assert_allclose(
+                got, mask.astype(np.float32) / (1.0 - p), rtol=1e-6)
+
+    def test_normalize_dim_collision(self):
+        xd = _randn(4, 6, seed=79)
+        for dim in (0, -1):
+            got = F.normalize(repro.Tensor(xd), dim=dim)
+            n = jnp.linalg.norm(xd, ord=2.0, axis=dim, keepdims=True)
+            np.testing.assert_allclose(
+                np.asarray(got.data),
+                np.asarray(xd / jnp.maximum(n, 1e-12)), rtol=1e-5,
+                atol=1e-7)
+
+    def test_pad_value_collision(self):
+        xd = _randn(3, 3, seed=80)
+        for val in (0.0, -7.0):
+            got = F.pad(repro.Tensor(xd), (1, 1), value=val)
+            np.testing.assert_allclose(
+                np.asarray(got.data),
+                np.asarray(jnp.pad(xd, ((0, 0), (1, 1)),
+                                   constant_values=val)), rtol=1e-6)
+
+    def test_missing_static_is_caught_by_this_harness(self):
+        """Negative control: dispatch the same op name with an emptied
+        static tuple and *different* closures — the second call replays
+        the first closure's entry, i.e. the exact silent-wrong-result
+        failure mode the conformance + collision suites exist to trip."""
+        from repro.core.tensor import _apply_op
+        xd = _randn(4, 4, seed=81)
+
+        def buggy_softmax(dim):
+            # simulates a call site that forgot `dim` in its statics
+            return _apply_op("buggy_softmax",
+                             lambda v: jax.nn.softmax(v, axis=dim),
+                             repro.Tensor(xd), static=())
+
+        a = np.asarray(buggy_softmax(0).data)
+        b = np.asarray(buggy_softmax(-1).data)
+        # stale replay: b silently equals a instead of axis=-1's result
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+        assert not np.allclose(
+            b, np.asarray(jax.nn.softmax(xd, axis=-1)), rtol=1e-3)
