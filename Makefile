@@ -18,6 +18,7 @@ conformance:
 bench-smoke:
 	mkdir -p benchmarks/out
 	$(PY) benchmarks/bench_dispatch.py --quick
+	$(PY) benchmarks/bench_serving.py --quick
 
 bench:
 	$(PY) -m benchmarks.run

@@ -1,46 +1,126 @@
-"""Serving benchmarks: paged KV engine throughput, prefix-sharing effect,
-Pallas kernels vs jnp reference wall-time (interpret mode; on-TPU numbers
-come from the roofline analysis instead)."""
+"""Serving benchmarks: scheduler/executor engine vs the pre-refactor
+monolith on the acceptance mixed workload, plus kernel wall-times.
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+    PYTHONPATH=src python benchmarks/bench_serving.py [--quick] [--json P]
 
-import repro
-from repro.models.lm import LMConfig, init_params
-from repro.serving.engine import ServingEngine
+Sections:
+  serving/unified — the scheduler/executor engine on the acceptance
+      workload (8 long prompts interleaved with 24 short ones): decode
+      tokens/s, mean TTFT, jit recompiles vs shape-bucket budget,
+      chunked-prefill liveliness (zero_decode_steps must stay 0).
+  serving/legacy  — the pre-refactor engine (un-jitted per-prompt
+      prefill, batch-size-keyed decode jit, per-sequence host KV
+      appends) on the SAME workload.  Acceptance: unified decode
+      tokens/s >= 1.5x legacy, recompiles <= bucket count.
+  serving/kernels — flash attention Pallas (interpret) vs jnp reference.
 
-from .common import emit, timeit
+JSON (``--json``, default benchmarks/out/serving.json) carries the gate
+fields consumed by CI.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.models.lm import LMConfig, init_params  # noqa: E402
+from repro.serving.engine import ServingEngine  # noqa: E402
+from repro.serving.legacy import LegacyServingEngine  # noqa: E402
+
+if __package__ in (None, ""):
+    from common import emit, header, timeit, write_json  # noqa: E402
+else:
+    from .common import emit, header, timeit, write_json  # noqa: E402
+
+GATE = {}
 
 
-def bench_engine() -> None:
-    cfg = LMConfig(name="bench-serve", n_layers=2, d_model=128, n_heads=4,
-                   n_kv_heads=2, d_ff=256, vocab_size=257,
-                   param_dtype=jnp.float32, remat="none",
-                   attn_backend="ref")
+def bench_cfg():
+    return LMConfig(name="bench-serve", n_layers=2, d_model=128,
+                    n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=257,
+                    param_dtype=jnp.float32, remat="none",
+                    attn_backend="ref")
+
+
+def mixed_workload(round_idx: int = 0):
+    """The acceptance workload: 8 long prompts interleaved with 24
+    short ones (3 shorts between consecutive longs).  ``round_idx``
+    shifts the token content so repeated rounds on one engine measure
+    steady-state serving, not prefix-cache hits."""
+    prompts = []
+    off = 17 * round_idx
+    for i in range(8):
+        prompts.append([(7 + off + 13 * i + j) % 251 for j in range(48)])
+        for s in range(3):
+            prompts.append([(91 + off + 5 * (3 * i + s) + j) % 251
+                            for j in range(8)])
+    return prompts
+
+
+def _serve(eng, round_idx: int):
+    ttfts = []
+    for p in mixed_workload(round_idx):
+        eng.submit(p, max_new_tokens=8)
+    done = eng.run()
+    assert len(done) == 32, f"only {len(done)}/32 served"
+    for r in done:
+        ttfts.append(r.first_token_at - r.submitted_at)
+    return ttfts
+
+
+def bench_engines(quick: bool) -> None:
+    cfg = bench_cfg()
     params = init_params(cfg, jax.random.key(0))
+    iters = 2 if quick else 4
 
-    def serve(shared_prefix: bool):
-        eng = ServingEngine(cfg, params, page_size=8, num_pages=256,
-                            max_batch=8)
-        base = list(range(1, 17))
-        for i in range(8):
-            prompt = base + [40 + i] if shared_prefix \
-                else [40 + i] + base[:-1] + [60 + i]
-            eng.submit(prompt, max_new_tokens=8)
-        done = eng.run()
-        assert len(done) == 8
-        return eng
+    # one engine per variant, reused across rounds: compilation is a
+    # server's one-time cost, throughput/TTFT are steady-state
+    eng = ServingEngine(cfg, params, page_size=8, num_pages=256,
+                        max_batch=8, chunk_size=16, token_budget=32,
+                        max_pages_per_seq=16)
+    leg = LegacyServingEngine(cfg, params, page_size=8, num_pages=256,
+                              max_batch=8)
 
-    t_unique = timeit(lambda: serve(False), warmup=1, iters=2)
-    t_shared = timeit(lambda: serve(True), warmup=1, iters=2)
-    eng = serve(True)
-    tokens = eng.metrics["decoded_tokens"]
-    emit("serving/unique_prompts", t_unique,
-         f"{tokens / t_unique:.1f} tok/s")
-    emit("serving/shared_prefix", t_shared,
-         f"{tokens / t_shared:.1f} tok/s; "
-         f"hit_rate={eng.stats()['prefix_hit_rate']:.2f}")
+    warmup = 1
+    n_requests = len(mixed_workload(0))
+    rounds = iter(range(100))
+    ttfts = []
+    t_new = timeit(lambda: ttfts.extend(_serve(eng, next(rounds))),
+                   warmup=warmup, iters=iters)
+    t_old = timeit(lambda: _serve(leg, next(rounds)),
+                   warmup=warmup, iters=iters)
+
+    m = eng.metrics
+    tokens_per_round = m["decoded_tokens"] / (iters + warmup)
+    tokens_old_per_round = leg.metrics["decoded_tokens"] / (iters + warmup)
+    ttfts = ttfts[n_requests * warmup:]       # drop compile round(s)
+    ttft_mean = sum(ttfts) / len(ttfts)
+
+    tps_new = tokens_per_round / t_new
+    tps_old = tokens_old_per_round / t_old
+    GATE.update({
+        "tokens_per_s": round(tps_new, 1),
+        "tokens_per_s_legacy": round(tps_old, 1),
+        "speedup": round(tps_new / tps_old, 2),
+        "ttft_mean_s": round(ttft_mean, 4),
+        "recompiles": m["bucket_compiles"],
+        "bucket_count": eng.bucket_count,
+        "zero_decode_steps": m["zero_decode_steps"],
+        "preemptions": m["preemptions"],
+        "prefill_chunks": m["prefill_chunks"],
+        "page_hwm": m["page_hwm"],
+    })
+    emit("serving/unified", t_new,
+         f"{tps_new:.1f} tok/s; ttft={ttft_mean * 1e3:.1f}ms; "
+         f"compiles={m['bucket_compiles']}/{eng.bucket_count} buckets",
+         **GATE)
+    emit("serving/legacy", t_old,
+         f"{tps_old:.1f} tok/s; speedup={tps_new / tps_old:.2f}x",
+         tokens_per_s=round(tps_old, 1))
 
 
 def bench_kernels() -> None:
@@ -60,12 +140,20 @@ def bench_kernels() -> None:
          "interpret mode (CPU emulation; TPU perf via roofline)")
 
 
-def run(quick: bool = True) -> None:
-    bench_engine()
-    bench_kernels()
+def run(quick: bool = True, json_path: str = None) -> None:
+    bench_engines(quick)
+    if not quick:
+        bench_kernels()
+    if json_path:
+        write_json(json_path, meta={"bench": "serving", "quick": quick,
+                                    "gate": GATE})
 
 
 if __name__ == "__main__":
-    from .common import header
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(__file__), "out", "serving.json"))
+    args = ap.parse_args()
     header()
-    run()
+    run(quick=args.quick, json_path=args.json)

@@ -8,7 +8,8 @@ Sections:
                 fusion on/off, foreach vs per-leaf optimizer
   runtime     — Fig. 1 async dispatch, Fig. 2 caching allocator,
                 §5.5 refcount memory, §5.4 dataloader transport
-  serving     — paged-KV engine + kernel wall-times (CPU interpret)
+  serving     — scheduler/executor engine vs the legacy monolith on the
+                mixed workload + kernel wall-times (CPU interpret)
   roofline    — summarizes experiments/dryrun/*.json (produced by
                 ``python -m repro.launch.dryrun --all``) — the TPU-side
                 performance story lives there.

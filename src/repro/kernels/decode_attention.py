@@ -1,7 +1,11 @@
-"""Single-token decode attention kernel (Pallas/TPU).
+"""Decode + mixed-batch attention kernels (Pallas/TPU).
 
-One new query token per sequence attends over a (B, Hkv, Smax, D) KV cache
-filled to ``cache_len[b]`` positions.  TPU adaptation of flash-decoding:
+``decode_attention_fwd``: one new query token per sequence attends over a
+(B, Hkv, Smax, D) KV cache filled to ``cache_len[b]`` positions.
+``mixed_attention_fwd``: a FLAT padded token batch (prefill chunks mixed
+with decode tokens — the serving executor's unified step) where token t
+selects its sequence's cache row via a scalar-prefetched segment id and
+masks keys past its own position.  TPU adaptation of flash-decoding:
 
   * grid = (B, Hkv, Smax/block_k) with the KV sweep as the sequential
     dimension; online-softmax stats live in VMEM scratch,
@@ -119,3 +123,107 @@ def decode_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
         interpret=interpret,
         name="decode_attention_fwd",
     )(jnp.asarray(cache_len, jnp.int32), q, k_cache, v_cache)
+
+
+def _mixed_kernel(seg_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, window: Optional[int], block_k: int):
+    t = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[t]
+    k_start = ki * block_k
+    # keys at <= pos are live; padding tokens (seg<0) read slot 0 but the
+    # caller discards their output
+    run = k_start <= pos
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k > pos - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0]                               # (G, D)
+        k = k_ref[0, 0]                               # (bk, D)
+        v = v_ref[0, 0]
+        scores = pl.dot(q, k, trans_b=True).astype(jnp.float32) * scale
+
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 1)
+        mask = k_pos <= pos
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > pos - window)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        p = jnp.exp(scores - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = jnp.broadcast_to(
+            alpha * l_scr[:, :1] + jnp.sum(p, axis=-1, keepdims=True),
+            l_scr.shape)
+        acc_scr[...] = acc_scr[...] * alpha + pl.dot(
+            p.astype(v.dtype), v).astype(jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def mixed_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
+                        v_cache: jnp.ndarray, seg_ids: jnp.ndarray,
+                        positions: jnp.ndarray, *, scale: float,
+                        window: Optional[int] = None,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (T, Hkv, G, D) — per-token query heads grouped by KV head;
+    k_cache/v_cache: (S, Hkv, L, D) per-slot contiguous caches;
+    seg_ids/positions: (T,) int32 scalar-prefetch operands.  The block
+    index map routes each token's KV tiles from ITS slot's cache row —
+    the paged-gather analogue of flash-decoding.  Returns (T, Hkv, G, D).
+    """
+    t, hkv, g, d = q.shape
+    smax = k_cache.shape[2]
+    block_k = min(block_k, smax)
+    nk = pl.cdiv(smax, block_k)
+    nslots = k_cache.shape[0]
+
+    kernel = functools.partial(_mixed_kernel, scale=scale, window=window,
+                               block_k=block_k)
+
+    def kv_map(ti, h, ki, seg, pos):
+        return (jnp.clip(seg[ti], 0, nslots - 1), h, ki, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(t, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda ti, h, ki, seg, pos: (ti, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), kv_map),
+            pl.BlockSpec((1, 1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ti, h, ki, seg, pos: (ti, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, hkv, g, d), q.dtype),
+        interpret=interpret,
+        name="mixed_attention_fwd",
+    )(jnp.asarray(seg_ids, jnp.int32), jnp.asarray(positions, jnp.int32),
+      q, k_cache, v_cache)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .decode_attention import decode_attention_fwd
+from .decode_attention import decode_attention_fwd, mixed_attention_fwd
 from .flash_attention import flash_attention_fwd
 from .mamba import mamba_scan_fwd
 from .rwkv6 import rwkv6_scan_fwd
@@ -113,6 +113,33 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     out = decode_attention_fwd(qg, kp, vp, lens, scale=eff_scale,
                                window=window, interpret=_interpret())
     return out[..., :d].reshape(b, hq, 1, d)
+
+
+# ----------------------------------------------------------------------
+# mixed prefill/decode attention (serving unified step)
+# ----------------------------------------------------------------------
+
+def mixed_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                    v_cache: jnp.ndarray, seg_ids: jnp.ndarray,
+                    positions: jnp.ndarray,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """q: (T, Hq, D) flat token batch vs per-slot caches (S, Hkv, L, D);
+    seg_ids/positions (T,) int32.  Inference-only (no vjp)."""
+    t, hq, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    g = hq // hkv
+    eff_scale = scale if scale is not None else d ** -0.5
+
+    qg = _pad_last(q.reshape(t, hkv, g, d), LANE)
+    kp = _pad_last(k_cache, LANE)
+    vp = _pad_last(v_cache, LANE)
+
+    out = mixed_attention_fwd(
+        qg, kp, vp, jnp.asarray(seg_ids, jnp.int32),
+        jnp.asarray(positions, jnp.int32), scale=eff_scale,
+        window=window, interpret=_interpret())
+    return out[..., :d].reshape(t, hq, d)
 
 
 # ----------------------------------------------------------------------

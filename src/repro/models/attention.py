@@ -151,6 +151,55 @@ def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     raise ValueError(f"unknown sdpa backend {backend!r}")
 
 
+def mixed_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                    v_cache: jnp.ndarray, seg_ids: jnp.ndarray,
+                    positions: jnp.ndarray,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None,
+                    backend: str = "auto") -> jnp.ndarray:
+    """Attention for a FLAT token batch mixing prefill chunks and decode
+    tokens (the serving executor's unified step).
+
+    q: (T, Hq, D) — one query per scheduled token; k_cache/v_cache:
+    (S, Hkv, L, D) — per-slot contiguous KV (gathered from pages, already
+    containing this step's scatter); seg_ids: (T,) slot index per token
+    (<0 = padding); positions: (T,) absolute position of the token in its
+    sequence.  Token t attends slot seg_ids[t]'s cache at key positions
+    <= positions[t] (its own K/V included) — causal both against history
+    and within its prefill chunk.  Returns (T, Hq, D).
+    """
+    t, hq, d = q.shape
+    s, hkv, l, _ = k_cache.shape
+    scale = scale if scale is not None else d ** -0.5
+
+    if backend in ("auto", "pallas"):
+        try:
+            from ..kernels import ops as kops
+            return kops.mixed_attention(q, k_cache, v_cache, seg_ids,
+                                        positions, scale=scale,
+                                        window=window)
+        except Exception:
+            if backend == "pallas":
+                raise
+
+    seg = jnp.clip(seg_ids, 0, s - 1)
+    k = jnp.take(k_cache, seg, axis=0)                  # (T, Hkv, L, D)
+    v = jnp.take(v_cache, seg, axis=0)
+    if hkv != hq:
+        k = repeat_kv(k, hq // hkv)
+        v = repeat_kv(v, hq // hkv)
+    logits = jnp.einsum("thd,thld->thl", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(l)[None, :]
+    valid = k_pos <= positions[:, None]
+    if window is not None:
+        valid = valid & (k_pos > positions[:, None] - window)
+    logits = jnp.where(valid[:, None, :], logits,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("thl,thld->thd", probs, v)
+
+
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, cache_len,
                      scale: Optional[float] = None,

@@ -1,0 +1,12 @@
+"""Serving stack: paged KV allocator (§5.3), pure-Python scheduler
+(control plane) and jitted executor (data plane) behind the
+``ServingEngine`` facade."""
+
+from .engine import ServingEngine
+from .executor import Executor
+from .kv_cache import PagedKVCache, PagePool
+from .legacy import LegacyServingEngine
+from .scheduler import Request, Scheduler, StepPlan
+
+__all__ = ["ServingEngine", "LegacyServingEngine", "PagedKVCache",
+           "PagePool", "Scheduler", "Executor", "Request", "StepPlan"]

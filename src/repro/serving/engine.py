@@ -1,51 +1,40 @@
-"""Continuous-batching serving engine over the paged KV cache.
+"""Continuous-batching serving engine — thin facade over the
+Scheduler/Executor split.
 
-Control flow (request admission, scheduling, page tables) runs in Python
-on the host; data flow (prefill/decode compute) is jit-compiled XLA — the
-paper's §5.2 separation, at serving granularity.
+Control flow (admission, chunked-prefill budgeting, preemption, COW,
+page tables) is pure host Python in ``scheduler.Scheduler``; data flow
+is ONE jitted ``unified_step`` per shape bucket in
+``executor.Executor`` — the paper's §5.2 separation, at serving
+granularity, with the §5.3 caching allocator underneath
+(``kv_cache.PagedKVCache``).
 
 Loop per step:
-  1. admit waiting requests while pages remain (admission control = the
-     allocator's job, §5.3),
-  2. batched single-token decode for all RUNNING sequences: gather paged
-     KV per layer → decode attention → append new KV pages,
-  3. retire finished sequences → pages refcount-released immediately
-     (§5.5) and reusable by the very next admission.
+  1. the scheduler admits waiting requests while pages remain, then
+     plans a padded token batch: one decode token per steady-state
+     sequence FIRST (liveliness), prefill chunks (≤ ``chunk_size``
+     tokens, env ``REPRO_PREFILL_CHUNK``) filling the rest of the budget,
+  2. the executor scatters the batch's K/V into pages, attends, and
+     samples — one device program, donated KV page arrays,
+  3. the scheduler commits: cursors advance, finished sequences release
+     pages refcount-immediately (§5.5) for the very next admission.
 
-This is a faithful small-scale vLLM-style engine; the dense-cache
-``launch.make_serve_step`` path is the pod-scale pjit twin (used by the
-decode_32k/long_500k dry-run cells).
+The pre-refactor monolith survives as ``legacy.LegacyServingEngine``
+(the benchmark baseline); the dense-cache ``launch.make_serve_step``
+path remains the pod-scale pjit twin.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..models import lm as LM
-from ..models import layers as L
-from ..models.attention import decode_attention
+from .executor import Executor
 from .kv_cache import PagedKVCache
+from .scheduler import Request, Scheduler
 
-
-@dataclass
-class Request:
-    req_id: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    out_tokens: List[int] = field(default_factory=list)
-    submitted_at: float = 0.0
-    first_token_at: Optional[float] = None
-    finished_at: Optional[float] = None
-
-    @property
-    def done(self) -> bool:
-        return len(self.out_tokens) >= self.max_new_tokens
+__all__ = ["ServingEngine", "Request"]
 
 
 class ServingEngine:
@@ -55,7 +44,10 @@ class ServingEngine:
 
     def __init__(self, cfg: LM.LMConfig, params, *, page_size: int = 16,
                  num_pages: int = 512, max_batch: int = 8,
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 chunk_size: Optional[int] = None,
+                 token_budget: Optional[int] = None,
+                 max_pages_per_seq: Optional[int] = None):
         for spec in cfg.pattern:
             if spec.mixer not in ("attn",):
                 raise ValueError(
@@ -70,209 +62,62 @@ class ServingEngine:
             head_dim=cfg.hd, page_size=page_size, num_pages=num_pages,
             dtype=jnp.float32 if cfg.param_dtype == jnp.float32
             else jnp.bfloat16)
-        self.waiting: List[Request] = []
-        self.running: Dict[int, Request] = {}
-        self._next_id = 0
-        self.metrics = {"steps": 0, "prefills": 0, "decoded_tokens": 0,
-                        "rejected_admissions": 0}
-
-        self._layer_params = self._split_layer_params()
-        self._token_fn = jax.jit(self._token_compute)
+        self.scheduler = Scheduler(
+            self.kv, max_batch=max_batch, chunk_size=chunk_size,
+            token_budget=token_budget,
+            max_pages_per_seq=max_pages_per_seq)
+        self.executor = Executor(cfg, params)
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: Sequence[int],
                max_new_tokens: int = 16) -> int:
-        req = Request(self._next_id, list(prompt), max_new_tokens,
-                      submitted_at=time.perf_counter())
-        self._next_id += 1
-        self.waiting.append(req)
-        return req.req_id
+        return self.scheduler.submit(prompt, max_new_tokens)
+
+    def _step(self) -> Optional[List[Request]]:
+        """One unified continuous-batching step (admission + plan +
+        execute + commit).  None = nothing runnable."""
+        plan = self.scheduler.plan()
+        if plan is None:
+            return None
+        next_tokens = self.executor.execute(plan, self.kv)
+        return self.scheduler.commit(plan, next_tokens)
+
+    def step(self) -> List[Request]:
+        return self._step() or []
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         finished: List[Request] = []
         for _ in range(max_steps):
-            if not self.waiting and not self.running:
+            if not self.scheduler.waiting and not self.scheduler.running:
                 break
-            self._admit()
-            finished.extend(self.step())
-            self.metrics["steps"] += 1
+            done = self._step()
+            if done is None:
+                # nothing runnable: every waiting request is blocked on
+                # pages even with the pool otherwise idle — bail like the
+                # legacy engine rather than spin
+                break
+            finished.extend(done)
         return finished
 
-    # -- scheduling -----------------------------------------------------------
-    def _admit(self) -> None:
-        while (self.waiting and len(self.running) < self.max_batch):
-            req = self.waiting[0]
-            if not self.kv.can_admit(len(req.prompt) + 1):
-                self.metrics["rejected_admissions"] += 1
-                break
-            self.waiting.pop(0)
-            if not self.kv.create(req.req_id, req.prompt):
-                self.waiting.insert(0, req)
-                break
-            self._prefill(req)
-            self.running[req.req_id] = req
+    # -- introspection ------------------------------------------------------
+    @property
+    def waiting(self) -> List[Request]:
+        return self.scheduler.waiting
 
-    def step(self) -> List[Request]:
-        """One continuous-batching decode step for all running seqs."""
-        if not self.running:
-            return []
-        seq_ids = sorted(self.running)
-        last_tokens = []
-        for s in seq_ids:
-            r = self.running[s]
-            last_tokens.append(r.out_tokens[-1] if r.out_tokens
-                               else r.prompt[-1])
-        next_tokens, layer_kv = self._decode_batch(seq_ids, last_tokens)
+    @property
+    def running(self) -> Dict[int, Request]:
+        return self.scheduler.running
 
-        finished = []
-        for i, s in enumerate(seq_ids):
-            r = self.running[s]
-            ok = self.kv.append(s, [(k[i], v[i]) for k, v in layer_kv])
-            if not ok:
-                # out of pages mid-flight: preempt (requeue) this request
-                self.kv.free_seq(s)
-                del self.running[s]
-                self.waiting.insert(0, r)
-                continue
-            tok = int(next_tokens[i])
-            r.out_tokens.append(tok)
-            if r.first_token_at is None:
-                r.first_token_at = time.perf_counter()
-            self.metrics["decoded_tokens"] += 1
-            if r.done:
-                r.finished_at = time.perf_counter()
-                self.kv.free_seq(s)
-                del self.running[s]
-                finished.append(r)
-        return finished
+    @property
+    def metrics(self) -> Dict[str, Any]:
+        m = dict(self.scheduler.metrics)
+        m["bucket_compiles"] = self.executor.compile_count
+        m["page_hwm"] = self.kv.pool.stats.page_hwm
+        return m
 
-    # -- compute -------------------------------------------------------------
-    def _split_layer_params(self):
-        cfg = self.cfg
-        layers = []
-        for gi in range(cfg.n_groups):
-            for j in range(len(cfg.pattern)):
-                layers.append(jax.tree_util.tree_map(
-                    lambda a: a[gi], self.params["groups"][j]))
-        for j in range(len(cfg.tail)):
-            layers.append(self.params["tail"][j])
-        return layers
-
-    def _prefill(self, req: Request) -> None:
-        """Run the prompt through the model, appending K/V page-wise.
-        Skips compute for fully prefix-shared pages' recompute is avoided
-        at the KV level (their K/V already sit in shared pages)."""
-        cfg = self.cfg
-        tokens = jnp.asarray([req.prompt], jnp.int32)
-        kvs, logits = self._prefill_fn(tokens)
-        # write K/V token-by-token into pages, SKIPPING tokens whose
-        # pages came from the prefix cache (their K/V is already there —
-        # this is the recompute-write saving of prefix sharing)
-        skip = self.kv.reused_prefix.get(req.req_id, 0)
-        self.kv.lengths[req.req_id] = skip
-        for t in range(skip, len(req.prompt)):
-            self.kv.append(req.req_id,
-                           [(k[0, :, t], v[0, :, t]) for k, v in kvs])
-        self.metrics["prefills"] += 1
-        req.out_tokens.append(int(jnp.argmax(logits[0, -1])))
-        req.first_token_at = time.perf_counter()
-
-    def _prefill_fn(self, tokens):
-        cfg = self.cfg
-        x = jnp.take(self.params["embed"], tokens, axis=0)
-        if cfg.embed_scale:
-            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
-        kvs = []
-        for lp in self._layer_params:
-            h = L.rms_norm(x, lp["norm1"], cfg.norm_eps, cfg.norm_offset) \
-                if cfg.norm == "rms" else L.layer_norm(
-                    x, lp["norm1"], lp.get("norm1_b"), cfg.norm_eps)
-            b, s, _ = h.shape
-            q = (h @ lp["attn"]["wq"]).reshape(
-                b, s, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
-            k = (h @ lp["attn"]["wk"]).reshape(
-                b, s, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
-            v = (h @ lp["attn"]["wv"]).reshape(
-                b, s, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
-            if cfg.rope_theta is not None:
-                pos = jnp.arange(s)
-                q = L.apply_rope(q, pos, cfg.rope_theta)
-                k = L.apply_rope(k, pos, cfg.rope_theta)
-            kvs.append((k, v))
-            from ..models.attention import sdpa_ref
-            o = sdpa_ref(q, k, v, is_causal=cfg.causal,
-                         scale=cfg.query_scale or cfg.hd ** -0.5)
-            o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
-            x = x + o @ lp["attn"]["wo"]
-            if "mlp" in lp:
-                h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps,
-                                cfg.norm_offset) if cfg.norm == "rms" \
-                    else L.layer_norm(x, lp["norm2"], lp.get("norm2_b"),
-                                      cfg.norm_eps)
-                x = x + L.mlp(lp["mlp"], h2, cfg.act)
-        x = L.rms_norm(x, self.params["final_norm"], cfg.norm_eps,
-                       cfg.norm_offset) if cfg.norm == "rms" else \
-            L.layer_norm(x, self.params["final_norm"],
-                         self.params.get("final_norm_b"), cfg.norm_eps)
-        logits = x @ (self.params["embed"].T if cfg.tie_embeddings
-                      else self.params["lm_head"])
-        return kvs, logits
-
-    def _token_compute(self, tokens, pos, gathered):
-        """One decode step given pre-gathered per-layer K/V."""
-        cfg = self.cfg
-        x = jnp.take(self.params["embed"], tokens[:, None], axis=0)
-        if cfg.embed_scale:
-            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
-        new_kv = []
-        for li, lp in enumerate(self._layer_params):
-            k_cache, v_cache, lens = gathered[li]
-            h = L.rms_norm(x, lp["norm1"], cfg.norm_eps, cfg.norm_offset) \
-                if cfg.norm == "rms" else L.layer_norm(
-                    x, lp["norm1"], lp.get("norm1_b"), cfg.norm_eps)
-            b = h.shape[0]
-            q = (h @ lp["attn"]["wq"]).reshape(
-                b, 1, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
-            k = (h @ lp["attn"]["wk"]).reshape(
-                b, 1, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
-            v = (h @ lp["attn"]["wv"]).reshape(
-                b, 1, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
-            if cfg.rope_theta is not None:
-                q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
-                k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
-            # attend over gathered cache + the fresh token
-            k_full = jnp.concatenate(
-                [k_cache, k.astype(k_cache.dtype)], axis=2)
-            v_full = jnp.concatenate(
-                [v_cache, v.astype(v_cache.dtype)], axis=2)
-            o = decode_attention(q, k_full, v_full, cache_len=lens + 1,
-                                 scale=cfg.query_scale or cfg.hd ** -0.5,
-                                 backend="ref")
-            o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
-            x = x + o @ lp["attn"]["wo"]
-            if "mlp" in lp:
-                h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps,
-                                cfg.norm_offset) if cfg.norm == "rms" \
-                    else L.layer_norm(x, lp["norm2"], lp.get("norm2_b"),
-                                      cfg.norm_eps)
-                x = x + L.mlp(lp["mlp"], h2, cfg.act)
-            new_kv.append((k[:, :, 0], v[:, :, 0]))
-        x = L.rms_norm(x, self.params["final_norm"], cfg.norm_eps,
-                       cfg.norm_offset) if cfg.norm == "rms" else \
-            L.layer_norm(x, self.params["final_norm"],
-                         self.params.get("final_norm_b"), cfg.norm_eps)
-        logits = x @ (self.params["embed"].T if cfg.tie_embeddings
-                      else self.params["lm_head"])
-        return jnp.argmax(logits[:, -1], axis=-1), new_kv
-
-    def _decode_batch(self, seq_ids, last_tokens):
-        gathered = [self.kv.gather(seq_ids, li)
-                    for li in range(self.cfg.n_layers)]
-        pos = jnp.asarray([self.kv.lengths[s] for s in seq_ids], jnp.int32)
-        tokens = jnp.asarray(last_tokens, jnp.int32)
-        next_tokens, new_kv = self._token_fn(tokens, pos, gathered)
-        return np.asarray(next_tokens), [
-            (np.asarray(k), np.asarray(v)) for k, v in new_kv]
+    @property
+    def bucket_count(self) -> int:
+        return self.scheduler.bucket_count
 
     def stats(self) -> Dict[str, Any]:
         return {**self.metrics, **self.kv.memory_stats()}

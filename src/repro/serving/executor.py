@@ -1,0 +1,164 @@
+"""Serving data plane — ONE jitted ``unified_step`` per shape bucket.
+
+The executor consumes a ``StepPlan`` (host-built by the Scheduler) and
+runs the whole step's compute as a single XLA executable:
+
+  * a padded FLAT token batch (T,) mixing prefill-chunk tokens and decode
+    tokens — the §5.2 "all data flow in one compiled program" applied to
+    serving,
+  * per-layer K/V appends are ONE flat scatter per layer INSIDE the jit
+    (``write_idx`` precomputed on host; out-of-bounds rows drop — the
+    padding/reused-prefix skip), replacing the O(prompt_len × layers)
+    host round-trips of the old ``_prefill``,
+  * paged KV is gathered per-slot from the device block-table mirror and
+    attended with ``mixed_attention`` (per-token segment ids/positions),
+  * the KV page arrays are DONATED: ``unified_step`` consumes them and
+    returns the updated pair; while the step runs the host holds no
+    alias (``PagedKVCache.take_kv``/``put_kv`` enforce this).
+
+Shapes are bucketed (powers of two: token batch up to ``token_budget``,
+pages per sequence up to ``max_pages_per_seq``; slot count fixed at
+``max_batch``), so the executable compiles O(log) variants total instead
+of one per live batch size — ``compile_count`` must stay ≤
+``Scheduler.bucket_count`` (the CI gate).
+"""
+
+from __future__ import annotations
+
+import math
+import warnings
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import layers as L
+from ..models.attention import mixed_attention
+from ..models import lm as LM
+from .kv_cache import PagedKVCache
+from .scheduler import StepPlan
+
+# buffer donation is a TPU/GPU optimization; CPU (tests) just warns
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+
+def split_layer_params(cfg: LM.LMConfig, params) -> list:
+    """Flatten the scan-stacked group params (+ unrolled tail) into one
+    per-layer list — serving iterates layers in Python, not lax.scan."""
+    layers = []
+    for gi in range(cfg.n_groups):
+        for j in range(len(cfg.pattern)):
+            layers.append(jax.tree_util.tree_map(
+                lambda a: a[gi], params["groups"][j]))
+    for j in range(len(cfg.tail)):
+        layers.append(params["tail"][j])
+    return layers
+
+
+class Executor:
+    """Owns the jitted step; stateless between calls except the compile
+    bookkeeping."""
+
+    def __init__(self, cfg: LM.LMConfig, params):
+        self.cfg = cfg
+        self.params = params
+        self._layer_params = split_layer_params(cfg, params)
+        self._step = jax.jit(self._unified_step, donate_argnums=(0, 1))
+        self._compiled: set = set()
+
+    @property
+    def compile_count(self) -> int:
+        if hasattr(self._step, "_cache_size"):
+            return self._step._cache_size()
+        return len(self._compiled)
+
+    # -- host entry -------------------------------------------------------
+    def execute(self, plan: StepPlan, kv: PagedKVCache) -> np.ndarray:
+        """Run one unified step; returns (max_batch,) sampled tokens."""
+        tables = kv.device_tables(plan.slot_seqs, plan.p_bucket)
+        ks, vs = kv.take_kv()
+        try:
+            next_tokens, ks, vs = self._step(
+                ks, vs,
+                jnp.asarray(plan.tokens), jnp.asarray(plan.seg_ids),
+                jnp.asarray(plan.positions), jnp.asarray(plan.write_idx),
+                tables, jnp.asarray(plan.sample_idx))
+        finally:
+            if ks is not None:
+                kv.put_kv(ks, vs)
+        self._compiled.add((plan.t_bucket, plan.p_bucket))
+        return np.asarray(next_tokens)
+
+    # -- the jitted data plane -------------------------------------------
+    def _unified_step(self, k_pages: List[jnp.ndarray],
+                      v_pages: List[jnp.ndarray],
+                      tokens: jnp.ndarray, seg_ids: jnp.ndarray,
+                      positions: jnp.ndarray, write_idx: jnp.ndarray,
+                      tables: jnp.ndarray, sample_idx: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, List[jnp.ndarray],
+                                 List[jnp.ndarray]]:
+        """tokens/seg_ids/positions/write_idx: (T,); tables: (S, P) block
+        tables; sample_idx: (S,).  Returns ((S,) argmax tokens, new K/V
+        page arrays)."""
+        cfg = self.cfg
+        t = tokens.shape[0]
+        n_pages, ps = k_pages[0].shape[0], k_pages[0].shape[1]
+        s_slots, p_pages = tables.shape
+        # (S, P*ps) flat gather index into the page-major KV views
+        gidx = (tables[:, :, None] * ps
+                + jnp.arange(ps)[None, None, :]).reshape(s_slots,
+                                                         p_pages * ps)
+        scale = cfg.query_scale or cfg.hd ** -0.5
+
+        x = jnp.take(self.params["embed"], tokens, axis=0)     # (T, D)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+        new_k, new_v = [], []
+        for li, lp in enumerate(self._layer_params):
+            h = L.rms_norm(x, lp["norm1"], cfg.norm_eps, cfg.norm_offset) \
+                if cfg.norm == "rms" else L.layer_norm(
+                    x, lp["norm1"], lp.get("norm1_b"), cfg.norm_eps)
+            q = (h @ lp["attn"]["wq"]).reshape(t, cfg.n_heads, cfg.hd)
+            k = (h @ lp["attn"]["wk"]).reshape(t, cfg.n_kv_heads, cfg.hd)
+            v = (h @ lp["attn"]["wv"]).reshape(t, cfg.n_kv_heads, cfg.hd)
+            if cfg.rope_theta is not None:
+                # (T, H, 1, hd) + per-token positions (T, 1)
+                q = L.apply_rope(q[:, :, None], positions[:, None],
+                                 cfg.rope_theta)[:, :, 0]
+                k = L.apply_rope(k[:, :, None], positions[:, None],
+                                 cfg.rope_theta)[:, :, 0]
+
+            # one segment-indexed scatter per layer (padding + reused-
+            # prefix rows carry an OOB index and drop)
+            kf = k_pages[li].reshape(n_pages * ps, cfg.n_kv_heads, cfg.hd)
+            vf = v_pages[li].reshape(n_pages * ps, cfg.n_kv_heads, cfg.hd)
+            kf = kf.at[write_idx].set(k.astype(kf.dtype), mode="drop")
+            vf = vf.at[write_idx].set(v.astype(vf.dtype), mode="drop")
+            new_k.append(kf.reshape(n_pages, ps, cfg.n_kv_heads, cfg.hd))
+            new_v.append(vf.reshape(n_pages, ps, cfg.n_kv_heads, cfg.hd))
+
+            # per-slot contiguous cache (includes this step's writes)
+            kc = jnp.take(kf, gidx, axis=0).transpose(0, 2, 1, 3)
+            vc = jnp.take(vf, gidx, axis=0).transpose(0, 2, 1, 3)
+            o = mixed_attention(q.astype(kc.dtype), kc, vc, seg_ids,
+                                positions, scale=scale,
+                                backend=cfg.attn_backend)
+            x = x + o.reshape(t, -1).astype(x.dtype) @ lp["attn"]["wo"]
+            if "mlp" in lp:
+                h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps,
+                                cfg.norm_offset) if cfg.norm == "rms" \
+                    else L.layer_norm(x, lp["norm2"], lp.get("norm2_b"),
+                                      cfg.norm_eps)
+                x = x + L.mlp(lp["mlp"], h2, cfg.act)
+
+        x = L.rms_norm(x, self.params["final_norm"], cfg.norm_eps,
+                       cfg.norm_offset) if cfg.norm == "rms" else \
+            L.layer_norm(x, self.params["final_norm"],
+                         self.params.get("final_norm_b"), cfg.norm_eps)
+        xs = jnp.take(x, sample_idx, axis=0)                   # (S, D)
+        logits = xs @ (self.params["embed"].T if cfg.tie_embeddings
+                       else self.params["lm_head"])
+        return jnp.argmax(logits, axis=-1), new_k, new_v

@@ -12,18 +12,32 @@ design transplanted:
   * a free-list that never returns pages to the system (incremental cache),
   * refcounting for immediate reuse (§5.5) — shared prefixes hold
     refcounts per page; copy-on-write on divergence,
-  * hash-based prefix reuse (the "cache hit" of Fig. 2, at page level).
+  * hash-based prefix reuse (the "cache hit" of Fig. 2, at page level),
+    generation-stamped so a freed-and-reallocated page can never serve a
+    stale prefix hit.
 
 Physical layout: one (num_pages, page_size, n_kv_heads, head_dim) array
 pair per attention layer; block tables are host-side Python (control
-plane) while gathers/scatters are jnp (data plane) — the paper's
-control/data-flow separation (§5.2).
+plane) while writes/gathers are batched jnp scatters (data plane) — the
+paper's control/data-flow separation (§5.2).
+
+Scheduler/executor contract (PR 3):
+
+  * ``lengths[seq]`` counts tokens whose K/V is VALID in the pages (a
+    fresh ``create`` sets it to the reused-prefix token count, not the
+    prompt length — the executor fills the rest chunk by chunk),
+  * ``take_kv`` / ``put_kv`` are the donation hooks: the executor takes
+    the page arrays, donates them to the jitted ``unified_step``, and
+    puts the results back.  While taken, the host MUST NOT alias them
+    (``self.k``/``self.v`` are None so any stray access raises),
+  * ``device_tables`` maintains a device-resident block-table mirror,
+    version-invalidated so an unchanged table costs no host→device copy.
 """
 
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -39,6 +53,7 @@ class PageStats:
     prefix_misses: int = 0
     cow_copies: int = 0
     oom_rejections: int = 0
+    page_hwm: int = 0          # high-water mark of live pages
 
     @property
     def hit_rate(self) -> float:
@@ -54,6 +69,14 @@ class PagePool:
         self.num_pages = num_pages
         self.free: List[int] = list(range(num_pages - 1, -1, -1))
         self.refs: Dict[int, int] = {}
+        # content generation per page: bumped on every alloc, so prefix
+        # index entries stamped with an older generation are stale.
+        self.gen: List[int] = [0] * num_pages
+        # tokens actually WRITTEN into each live page — a prefix hit on a
+        # page some sharer has not filled yet must not be trusted for
+        # compute reuse (chunked prefill admits sharers before the first
+        # writer finishes)
+        self.filled: Dict[int, int] = {}
         self.stats = PageStats()
 
     def alloc(self) -> Optional[int]:
@@ -62,7 +85,10 @@ class PagePool:
             return None
         page = self.free.pop()
         self.refs[page] = 1
+        self.gen[page] += 1
+        self.filled[page] = 0
         self.stats.allocated_pages += 1
+        self.stats.page_hwm = max(self.stats.page_hwm, len(self.refs))
         return page
 
     def retain(self, page: int) -> None:
@@ -92,15 +118,22 @@ class PagedKVCache:
         self.page_size = page_size
         self.pool = PagePool(num_pages)
         shape = (num_pages, page_size, n_kv_heads, head_dim)
-        self.k = [jnp.zeros(shape, dtype) for _ in range(n_layers)]
-        self.v = [jnp.zeros(shape, dtype) for _ in range(n_layers)]
-        # sequence id -> (block_table, length)
+        self.k: Optional[List[jnp.ndarray]] = [
+            jnp.zeros(shape, dtype) for _ in range(n_layers)]
+        self.v: Optional[List[jnp.ndarray]] = [
+            jnp.zeros(shape, dtype) for _ in range(n_layers)]
+        self.dtype = dtype
+        # sequence id -> (block_table, valid-KV length)
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
         self.reused_prefix: Dict[int, int] = {}   # tokens whose pages were
                                                   # prefix-cache hits
-        # prefix cache: page-content hash chain -> page id
-        self._prefix_index: Dict[bytes, int] = {}
+        # prefix cache: page-content hash chain -> (page id, generation)
+        self._prefix_index: Dict[bytes, Tuple[int, int]] = {}
+        # device block-table mirror invalidation
+        self._table_version = 0
+        self._mirror_key: Optional[tuple] = None
+        self._mirror: Optional[jnp.ndarray] = None
 
     # -- sequence lifecycle ----------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
@@ -112,7 +145,9 @@ class PagedKVCache:
     def create(self, seq_id: int, prompt_tokens: Sequence[int]) -> bool:
         """Admit a sequence; reuse shared-prefix pages where the page-
         aligned prompt hash matches (RadixAttention-style, page granular).
-        Returns False when out of pages (admission control)."""
+        ``lengths[seq_id]`` is set to the reused token count — the K/V of
+        the remaining tokens is not in the pages yet.  Returns False when
+        out of pages (admission control)."""
         assert seq_id not in self.tables
         n = len(prompt_tokens)
         table: List[int] = []
@@ -124,9 +159,11 @@ class PagedKVCache:
             h.update(repr(chunk).encode())
             key = h.digest()
             hit = self._prefix_index.get(key) if full_page else None
-            if hit is not None and hit in self.pool.refs:
-                self.pool.retain(hit)
-                table.append(hit)
+            if (hit is not None and hit[0] in self.pool.refs
+                    and self.pool.gen[hit[0]] == hit[1]
+                    and reused * self.page_size == start):
+                self.pool.retain(hit[0])
+                table.append(hit[0])
                 reused += 1
                 self.pool.stats.prefix_hits += 1
                 continue
@@ -137,18 +174,89 @@ class PagedKVCache:
                 return False
             self.pool.stats.prefix_misses += 1
             if full_page:
-                self._prefix_index[key] = page
+                self._prefix_index[key] = (page, self.pool.gen[page])
             table.append(page)
         self.tables[seq_id] = table
-        self.lengths[seq_id] = n
+        # valid KV = the reused prefix, capped by what the sharers have
+        # actually WRITTEN so far — a mid-prefill writer's pages are
+        # claimed (page dedup) but their unwritten tail is re-computed by
+        # this sequence (identical, hash-pledged content)
+        self.lengths[seq_id] = min(reused * self.page_size,
+                                   self._readable(table))
         self.reused_prefix[seq_id] = reused * self.page_size
+        self._table_version += 1
         return True
+
+    def _readable(self, table: List[int]) -> int:
+        """Contiguous token prefix actually written across a table."""
+        total = 0
+        for p in table:
+            f = self.pool.filled.get(p, 0)
+            total += f
+            if f < self.page_size:
+                break
+        return total
 
     def free_seq(self, seq_id: int) -> None:
         for p in self.tables.pop(seq_id):
             self.pool.release(p)
         del self.lengths[seq_id]
         self.reused_prefix.pop(seq_id, None)
+        self._table_version += 1
+
+    def ensure_capacity(self, seq_id: int, n_tokens: int) -> bool:
+        """Grow the block table so ``n_tokens`` positions have pages.
+        Returns False (table unchanged in coverage, caller preempts) when
+        the pool runs dry."""
+        table = self.tables[seq_id]
+        need = self.pages_needed(n_tokens)
+        grown = []
+        while len(table) < need:
+            page = self.pool.alloc()
+            if page is None:
+                for p in grown:
+                    self.pool.release(p)
+                    table.pop()
+                return False
+            table.append(page)
+            grown.append(page)
+        if grown:
+            self._table_version += 1
+        return True
+
+    def make_writable(self, seq_id: int, start: int, end: int,
+                      divergent: bool = True) -> bool:
+        """Copy-on-write guard for token span [start, end).
+
+        ``divergent=True`` (generated tokens): any shared page is copied
+        first so the write cannot clobber a sibling sequence.
+        ``divergent=False`` (prompt-content prefill): shared pages are
+        written THROUGH — sharing only ever arises from hash-equal
+        prefixes, so every sharer pledges byte-identical content and the
+        write is idempotent (this is what lets chunked prefill fill
+        dedup'd pages without splitting them)."""
+        if not divergent:
+            return True
+        for page_pos in range(start // self.page_size,
+                              -(-end // self.page_size)):
+            if self._writable_page(seq_id, page_pos) is None:
+                return False
+        return True
+
+    def advance(self, seq_id: int, n_tokens: int) -> None:
+        """Mark K/V valid (written) up to ``n_tokens`` — called after a
+        ``unified_step``/batched write lands."""
+        table = self.tables[seq_id]
+        ps = self.page_size
+        # pages below the already-valid length were marked when first
+        # written — skip them (keeps the decode hot loop O(1) per step)
+        for i in range(self.lengths[seq_id] // ps, n_tokens // ps):
+            self.pool.filled[table[i]] = ps
+        if n_tokens % ps:
+            p = table[n_tokens // ps]
+            self.pool.filled[p] = max(self.pool.filled.get(p, 0),
+                                      n_tokens % ps)
+        self.lengths[seq_id] = max(self.lengths[seq_id], n_tokens)
 
     def _writable_page(self, seq_id: int, page_pos: int) -> Optional[int]:
         """Copy-on-write: if the page is shared, copy it before writing."""
@@ -166,6 +274,7 @@ class PagedKVCache:
             self.pool.release(page)
             table[page_pos] = new_page
             self.pool.stats.cow_copies += 1
+            self._table_version += 1
             return new_page
         return page
 
@@ -184,6 +293,7 @@ class PagedKVCache:
             if page is None:
                 return False
             table.append(page)
+            self._table_version += 1
         page = self._writable_page(seq_id, page_pos)
         if page is None:
             return False
@@ -192,15 +302,97 @@ class PagedKVCache:
                 k_t.astype(self.k[layer].dtype))
             self.v[layer] = self.v[layer].at[page, offset].set(
                 v_t.astype(self.v[layer].dtype))
+        self.pool.filled[page] = max(self.pool.filled.get(page, 0),
+                                     offset + 1)
         self.lengths[seq_id] = pos + 1
         return True
+
+    def flat_slots(self, seq_id: int, start: int, end: int) -> np.ndarray:
+        """Flat (page*page_size + offset) destination for each token
+        position in [start, end) — the scatter indices the executor (or
+        ``write_batch``) uses.  Pages must already exist."""
+        pos = np.arange(start, end)
+        table = np.asarray(self.tables[seq_id], np.int64)
+        return table[pos // self.page_size] * self.page_size \
+            + pos % self.page_size
+
+    def write_batch(self, seq_id: int,
+                    layer_kv: List[Tuple[jnp.ndarray, jnp.ndarray]],
+                    start: int, end: int) -> bool:
+        """Write token span [start, end) with ONE scatter per layer
+        (replaces the per-token ``append`` loop of the old prefill path).
+        layer_kv[i] = ((end-start, n_kv_heads, hd), same for v).
+        Allocates pages and COW-copies shared ones as needed."""
+        if end <= start:
+            return True
+        if not self.ensure_capacity(seq_id, end):
+            return False
+        if not self.make_writable(seq_id, start, end, divergent=False):
+            return False
+        idx = jnp.asarray(self.flat_slots(seq_id, start, end))
+        npg, ps = self.pool.num_pages, self.page_size
+        for layer, (k_s, v_s) in enumerate(layer_kv):
+            kf = self.k[layer].reshape(npg * ps, self.n_kv_heads,
+                                       self.head_dim)
+            vf = self.v[layer].reshape(npg * ps, self.n_kv_heads,
+                                       self.head_dim)
+            self.k[layer] = kf.at[idx].set(k_s.astype(kf.dtype)).reshape(
+                npg, ps, self.n_kv_heads, self.head_dim)
+            self.v[layer] = vf.at[idx].set(v_s.astype(vf.dtype)).reshape(
+                npg, ps, self.n_kv_heads, self.head_dim)
+        self.advance(seq_id, end)
+        return True
+
+    def write_prompt(self, seq_id: int,
+                     layer_kv: List[Tuple[jnp.ndarray, jnp.ndarray]],
+                     n_tokens: int) -> bool:
+        """Batched prefill write: store K/V for every prompt token PAST
+        the already-valid reused prefix (the skip preserves the
+        recompute-write saving of prefix sharing).  layer_kv[i] holds the
+        FULL prompt's (n_tokens, n_kv_heads, hd) arrays; the valid slice
+        is dropped here."""
+        skip = min(self.lengths[seq_id], n_tokens)
+        span = [(k[skip:], v[skip:]) for k, v in layer_kv]
+        return self.write_batch(seq_id, span, skip, n_tokens)
+
+    # -- device mirror / donation ----------------------------------------
+    def device_tables(self, seq_ids: Sequence[int], max_pages: int
+                      ) -> jnp.ndarray:
+        """(len(seq_ids), max_pages) int32 block-table mirror, padded with
+        page 0.  Re-uploaded only when a table changed or the slot/bucket
+        layout differs (version-keyed)."""
+        key = (tuple(seq_ids), max_pages, self._table_version)
+        if key == self._mirror_key and self._mirror is not None:
+            return self._mirror
+        out = np.zeros((len(seq_ids), max_pages), np.int32)
+        for i, s in enumerate(seq_ids):
+            if s < 0:
+                continue
+            t = self.tables[s][:max_pages]
+            out[i, : len(t)] = t
+        self._mirror = jnp.asarray(out)
+        self._mirror_key = key
+        return self._mirror
+
+    def take_kv(self) -> Tuple[List[jnp.ndarray], List[jnp.ndarray]]:
+        """Donation hook: hand the page arrays to the executor.  The host
+        must not alias them until ``put_kv`` returns the new ones —
+        ``unified_step`` donates (consumes) these buffers."""
+        ks, vs = self.k, self.v
+        assert ks is not None, "KV arrays already taken (donation hazard)"
+        self.k = self.v = None
+        return ks, vs
+
+    def put_kv(self, ks: List[jnp.ndarray], vs: List[jnp.ndarray]) -> None:
+        self.k, self.v = list(ks), list(vs)
 
     def gather(self, seq_ids: Sequence[int], layer: int,
                pad_to: Optional[int] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Materialize contiguous (B, n_kv, L, hd) K/V for a batch of
         sequences from their page tables (gather-based paged attention;
-        a block-table Pallas kernel is the further TPU optimization)."""
+        the executor's in-jit gather over ``device_tables`` is the fused
+        variant)."""
         max_len = max(self.lengths[s] for s in seq_ids)
         pad_to = pad_to or max_len
         max_pages = self.pages_needed(pad_to)
@@ -221,13 +413,14 @@ class PagedKVCache:
 
     def memory_stats(self) -> Dict[str, float]:
         page_bytes = (self.page_size * self.n_kv_heads * self.head_dim
-                      * 2 * self.k[0].dtype.itemsize * self.n_layers)
+                      * 2 * np.dtype(self.dtype).itemsize * self.n_layers)
         used = self.pool.num_pages - self.pool.num_free
         return {
             "pages_total": self.pool.num_pages,
             "pages_used": used,
             "pages_free": self.pool.num_free,
             "bytes_used": used * page_bytes,
+            "page_hwm": self.pool.stats.page_hwm,
             "prefix_hit_rate": self.pool.stats.hit_rate,
             "cow_copies": self.pool.stats.cow_copies,
             "oom_rejections": self.pool.stats.oom_rejections,

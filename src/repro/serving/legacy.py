@@ -1,0 +1,255 @@
+"""Pre-refactor monolithic serving engine — kept as the measured
+baseline for ``benchmarks/bench_serving.py`` (the scheduler/executor
+split must beat this by ≥ 1.5× decode tokens/s).
+
+Characteristic costs the refactor removes (do NOT "fix" these here —
+they ARE the baseline): un-jitted per-prompt prefill (eager op-by-op
+forward per admission), a decode jit keyed on live batch size (one
+recompile per distinct batch size), and per-sequence host-side KV
+appends after every step.  The prefill page writes go through the
+batched ``write_prompt`` (one scatter per layer) since the old
+per-token loop lived at the kv_cache API level, and the
+preemption-resume path carries ``out_tokens`` through re-prefill — both
+semantic fixes, not data-plane restructuring.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm as LM
+from ..models import layers as L
+from ..models.attention import decode_attention
+from .executor import split_layer_params
+from .kv_cache import PagedKVCache
+from .scheduler import Request
+
+
+class LegacyServingEngine:
+    """Batched serving with host-interleaved control and compute (the
+    pre-scheduler/executor design)."""
+
+    def __init__(self, cfg: LM.LMConfig, params, *, page_size: int = 16,
+                 num_pages: int = 512, max_batch: int = 8,
+                 greedy: bool = True):
+        for spec in cfg.pattern:
+            if spec.mixer not in ("attn",):
+                raise ValueError(
+                    "paged engine serves full-attention models; use the "
+                    "dense-cache pjit path for hybrid/ssm archs")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.greedy = greedy
+        self.kv = PagedKVCache(
+            n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, page_size=page_size, num_pages=num_pages,
+            dtype=jnp.float32 if cfg.param_dtype == jnp.float32
+            else jnp.bfloat16)
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}
+        self._next_id = 0
+        self.metrics = {"steps": 0, "prefills": 0, "decoded_tokens": 0,
+                        "rejected_admissions": 0}
+
+        self._layer_params = self._split_layer_params()
+        self._token_fn = jax.jit(self._token_compute)
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, prompt: Sequence[int],
+               max_new_tokens: int = 16) -> int:
+        req = Request(self._next_id, list(prompt), max_new_tokens,
+                      submitted_at=time.perf_counter())
+        self._next_id += 1
+        self.waiting.append(req)
+        return req.req_id
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            if not self.waiting and not self.running:
+                break
+            self._admit()
+            finished.extend(self.step())
+            self.metrics["steps"] += 1
+        return finished
+
+    # -- scheduling -----------------------------------------------------------
+    def _admit(self) -> None:
+        while (self.waiting and len(self.running) < self.max_batch):
+            req = self.waiting[0]
+            hist = req.history      # prompt + any pre-preemption tokens
+            if not self.kv.can_admit(len(hist) + 1):
+                self.metrics["rejected_admissions"] += 1
+                break
+            self.waiting.pop(0)
+            if not self.kv.create(req.req_id, hist):
+                self.waiting.insert(0, req)
+                break
+            self._prefill(req)
+            self.running[req.req_id] = req
+
+    def step(self) -> List[Request]:
+        """One continuous-batching decode step for all running seqs."""
+        if not self.running:
+            return []
+        seq_ids = sorted(self.running)
+        last_tokens = []
+        for s in seq_ids:
+            r = self.running[s]
+            last_tokens.append(r.out_tokens[-1] if r.out_tokens
+                               else r.prompt[-1])
+        next_tokens, layer_kv = self._decode_batch(seq_ids, last_tokens)
+
+        finished = []
+        for i, s in enumerate(seq_ids):
+            r = self.running[s]
+            ok = self.kv.append(s, [(k[i], v[i]) for k, v in layer_kv])
+            if not ok:
+                # out of pages mid-flight: preempt (requeue) this request
+                self.kv.free_seq(s)
+                del self.running[s]
+                self.waiting.insert(0, r)
+                continue
+            tok = int(next_tokens[i])
+            r.out_tokens.append(tok)
+            if r.first_token_at is None:
+                r.first_token_at = time.perf_counter()
+            self.metrics["decoded_tokens"] += 1
+            if r.done:
+                r.finished_at = time.perf_counter()
+                self.kv.free_seq(s)
+                del self.running[s]
+                finished.append(r)
+        return finished
+
+    # -- compute -------------------------------------------------------------
+    def _split_layer_params(self):
+        return split_layer_params(self.cfg, self.params)
+
+    def _prefill(self, req: Request) -> None:
+        """Run the whole history through the model eagerly (un-jitted —
+        the baseline cost), write K/V past the reused prefix in one
+        batched scatter per layer, and emit the first token only for a
+        FRESH request (a resumed one already holds its tokens)."""
+        hist = req.history
+        tokens = jnp.asarray([hist], jnp.int32)
+        kvs, logits = self._prefill_fn(tokens)
+        # resumed requests keep their last generated token OUT of the
+        # cache: the next decode step feeds it (writing it here too would
+        # double-append its K/V and derail the continuation)
+        n_write = len(hist) - (1 if req.out_tokens else 0)
+        layer_kv = [(k[0].transpose(1, 0, 2)[:n_write],
+                     v[0].transpose(1, 0, 2)[:n_write]) for k, v in kvs]
+        self.kv.write_prompt(req.req_id, layer_kv, n_write)
+        self.kv.lengths[req.req_id] = min(self.kv.lengths[req.req_id],
+                                          n_write)
+        self.metrics["prefills"] += 1
+        if not req.out_tokens:
+            req.out_tokens.append(int(jnp.argmax(logits[0, -1])))
+            req.first_token_at = time.perf_counter()
+
+    def _prefill_fn(self, tokens):
+        cfg = self.cfg
+        x = jnp.take(self.params["embed"], tokens, axis=0)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        kvs = []
+        for lp in self._layer_params:
+            h = L.rms_norm(x, lp["norm1"], cfg.norm_eps, cfg.norm_offset) \
+                if cfg.norm == "rms" else L.layer_norm(
+                    x, lp["norm1"], lp.get("norm1_b"), cfg.norm_eps)
+            b, s, _ = h.shape
+            q = (h @ lp["attn"]["wq"]).reshape(
+                b, s, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
+            k = (h @ lp["attn"]["wk"]).reshape(
+                b, s, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+            v = (h @ lp["attn"]["wv"]).reshape(
+                b, s, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+            if cfg.rope_theta is not None:
+                pos = jnp.arange(s)
+                q = L.apply_rope(q, pos, cfg.rope_theta)
+                k = L.apply_rope(k, pos, cfg.rope_theta)
+            kvs.append((k, v))
+            from ..models.attention import sdpa_ref
+            o = sdpa_ref(q, k, v, is_causal=cfg.causal,
+                         scale=cfg.query_scale or cfg.hd ** -0.5)
+            o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+            x = x + o @ lp["attn"]["wo"]
+            if "mlp" in lp:
+                h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps,
+                                cfg.norm_offset) if cfg.norm == "rms" \
+                    else L.layer_norm(x, lp["norm2"], lp.get("norm2_b"),
+                                      cfg.norm_eps)
+                x = x + L.mlp(lp["mlp"], h2, cfg.act)
+        x = L.rms_norm(x, self.params["final_norm"], cfg.norm_eps,
+                       cfg.norm_offset) if cfg.norm == "rms" else \
+            L.layer_norm(x, self.params["final_norm"],
+                         self.params.get("final_norm_b"), cfg.norm_eps)
+        logits = x @ (self.params["embed"].T if cfg.tie_embeddings
+                      else self.params["lm_head"])
+        return kvs, logits
+
+    def _token_compute(self, tokens, pos, gathered):
+        """One decode step given pre-gathered per-layer K/V."""
+        cfg = self.cfg
+        x = jnp.take(self.params["embed"], tokens[:, None], axis=0)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        new_kv = []
+        for li, lp in enumerate(self._layer_params):
+            k_cache, v_cache, lens = gathered[li]
+            h = L.rms_norm(x, lp["norm1"], cfg.norm_eps, cfg.norm_offset) \
+                if cfg.norm == "rms" else L.layer_norm(
+                    x, lp["norm1"], lp.get("norm1_b"), cfg.norm_eps)
+            b = h.shape[0]
+            q = (h @ lp["attn"]["wq"]).reshape(
+                b, 1, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
+            k = (h @ lp["attn"]["wk"]).reshape(
+                b, 1, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+            v = (h @ lp["attn"]["wv"]).reshape(
+                b, 1, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+            if cfg.rope_theta is not None:
+                q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+                k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+            # attend over gathered cache + the fresh token
+            k_full = jnp.concatenate(
+                [k_cache, k.astype(k_cache.dtype)], axis=2)
+            v_full = jnp.concatenate(
+                [v_cache, v.astype(v_cache.dtype)], axis=2)
+            o = decode_attention(q, k_full, v_full, cache_len=lens + 1,
+                                 scale=cfg.query_scale or cfg.hd ** -0.5,
+                                 backend="ref")
+            o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+            x = x + o @ lp["attn"]["wo"]
+            if "mlp" in lp:
+                h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps,
+                                cfg.norm_offset) if cfg.norm == "rms" \
+                    else L.layer_norm(x, lp["norm2"], lp.get("norm2_b"),
+                                      cfg.norm_eps)
+                x = x + L.mlp(lp["mlp"], h2, cfg.act)
+            new_kv.append((k[:, :, 0], v[:, :, 0]))
+        x = L.rms_norm(x, self.params["final_norm"], cfg.norm_eps,
+                       cfg.norm_offset) if cfg.norm == "rms" else \
+            L.layer_norm(x, self.params["final_norm"],
+                         self.params.get("final_norm_b"), cfg.norm_eps)
+        logits = x @ (self.params["embed"].T if cfg.tie_embeddings
+                      else self.params["lm_head"])
+        return jnp.argmax(logits[:, -1], axis=-1), new_kv
+
+    def _decode_batch(self, seq_ids, last_tokens):
+        gathered = [self.kv.gather(seq_ids, li)
+                    for li in range(self.cfg.n_layers)]
+        pos = jnp.asarray([self.kv.lengths[s] for s in seq_ids], jnp.int32)
+        tokens = jnp.asarray(last_tokens, jnp.int32)
+        next_tokens, new_kv = self._token_fn(tokens, pos, gathered)
+        return np.asarray(next_tokens), [
+            (np.asarray(k), np.asarray(v)) for k, v in new_kv]
+
+    def stats(self) -> Dict[str, Any]:
+        return {**self.metrics, **self.kv.memory_stats()}

@@ -1,0 +1,345 @@
+"""Serving control plane — pure-Python scheduling over the paged KV pool.
+
+The §5.2 separation applied to serving: everything here is host Python
+(FIFO admission, chunked-prefill token budgeting, preemption, COW and
+page-table maintenance); everything shape-like is bucketed so the
+executor's single jitted ``unified_step`` compiles O(log) variants.
+
+A request's lifetime is a single token cursor ``computed`` over its full
+token history ``prompt + out_tokens``:
+
+  * prefill = spans of up to ``chunk_size`` tokens per step (so a long
+    prompt never blocks the decode tokens of running sequences — chunked
+    prefill, no head-of-line blocking),
+  * decode = the degenerate 1-token span at the end of the history,
+  * the step that processes the FINAL history token samples the next
+    token (argmax) — uniform across "last prefill chunk" and "decode".
+
+Preempt/resume falls out of the same cursor: preemption frees the pages
+and requeues the request AT THE FRONT with ``out_tokens`` intact;
+re-admission rebuilds the history as ``prompt + out_tokens`` and prefills
+from the (possibly prefix-cache-reused) start — no token is re-emitted
+because sampling only happens at the end of the rebuilt history.  (The
+old engine re-prefilled ``prompt`` alone and unconditionally appended a
+fresh argmax token — the preemption-data-loss bug this refactor fixes.)
+
+Scheduling policy per step (``token_budget`` tokens total):
+
+  1. decode spans first, one token per running decode-phase sequence —
+     a step can never have 0 decode tokens while decodable sequences
+     exist (liveliness; violations would bump ``zero_decode_steps``),
+  2. remaining budget goes to prefill chunks in FIFO admission order,
+     ``chunk_size`` (env ``REPRO_PREFILL_CHUNK``) tokens max per request
+     per step.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .kv_cache import PagedKVCache
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    # scheduler state
+    computed: int = 0            # history tokens whose compute has run
+    slot: int = -1               # executor slot while RUNNING
+    created_len: int = 0         # history length at (re-)admission:
+                                 # writes below it are hash-pledged
+                                 # prompt content, at/above it divergent
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+    @property
+    def history(self) -> List[int]:
+        return self.prompt + self.out_tokens
+
+    @property
+    def in_decode(self) -> bool:
+        """One history token left to process — the continuous-batching
+        steady state (also the final chunk of a 1-token-tail prefill)."""
+        return self.computed == len(self.prompt) + len(self.out_tokens) - 1
+
+
+@dataclass
+class Span:
+    """One request's scheduled token span [start, end) for this step."""
+    req: Request
+    start: int
+    end: int
+    sample: bool                 # span covers the last history token
+    decode: bool                 # steady-state decode span
+
+
+@dataclass
+class StepPlan:
+    """Host-built, bucket-padded operands for one ``unified_step``."""
+    spans: List[Span]
+    slot_seqs: List[int]         # slot -> seq id (-1 = empty slot)
+    tokens: np.ndarray           # (T,) int32, 0-padded
+    seg_ids: np.ndarray          # (T,) int32, -1 = padding
+    positions: np.ndarray        # (T,) int32
+    write_idx: np.ndarray        # (T,) int32 flat page slot, OOB = skip
+    sample_idx: np.ndarray       # (S,) int32 token-batch row per slot
+    n_tokens: int                # live tokens before padding
+    t_bucket: int
+    p_bucket: int
+
+
+def pow2_bucket(n: int, lo: int, hi: int) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    if b > hi:
+        raise ValueError(f"{n} exceeds bucket cap {hi}")
+    return b
+
+
+class Scheduler:
+    """FIFO continuous-batching scheduler with chunked prefill."""
+
+    def __init__(self, kv: PagedKVCache, *, max_batch: int,
+                 chunk_size: Optional[int] = None,
+                 token_budget: Optional[int] = None,
+                 max_pages_per_seq: Optional[int] = None,
+                 min_t_bucket: int = 8, min_p_bucket: int = 4):
+        self.kv = kv
+        self.max_batch = max_batch
+        self.chunk_size = chunk_size or int(
+            os.environ.get("REPRO_PREFILL_CHUNK", "16"))
+        budget = token_budget or max(2 * max_batch, self.chunk_size)
+        self.token_budget = pow2_bucket(max(budget, max_batch), 1, 1 << 30)
+        self.max_pages_per_seq = max_pages_per_seq or kv.pool.num_pages
+        self.min_t_bucket = min(min_t_bucket, self.token_budget)
+        self.min_p_bucket = min(min_p_bucket,
+                                pow2_bucket(self.max_pages_per_seq, 1,
+                                            1 << 30))
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}
+        self.slots: List[int] = [-1] * max_batch      # slot -> seq id
+        self._next_id = 0
+        self.metrics = {
+            "steps": 0, "prefills": 0, "decoded_tokens": 0,
+            "rejected_admissions": 0, "prefill_chunks": 0,
+            "preemptions": 0, "zero_decode_steps": 0,
+        }
+
+    # -- bucket contract --------------------------------------------------
+    def t_buckets(self) -> List[int]:
+        out, b = [], self.min_t_bucket
+        while b <= self.token_budget:
+            out.append(b)
+            b *= 2
+        return out
+
+    def p_buckets(self) -> List[int]:
+        cap = pow2_bucket(self.max_pages_per_seq, self.min_p_bucket,
+                          1 << 30)
+        out, b = [], self.min_p_bucket
+        while b <= cap:
+            out.append(b)
+            b *= 2
+        return out
+
+    @property
+    def bucket_count(self) -> int:
+        return len(self.t_buckets()) * len(self.p_buckets())
+
+    # -- admission --------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16
+               ) -> int:
+        total = len(prompt) + max_new_tokens
+        if self.kv.pages_needed(total) > self.max_pages_per_seq:
+            raise ValueError(
+                f"request needs {self.kv.pages_needed(total)} pages, "
+                f"max_pages_per_seq={self.max_pages_per_seq}")
+        req = Request(self._next_id, list(prompt), max_new_tokens,
+                      submitted_at=time.perf_counter())
+        self._next_id += 1
+        self.waiting.append(req)
+        return req.req_id
+
+    def _free_slot(self) -> int:
+        for i, s in enumerate(self.slots):
+            if s < 0:
+                return i
+        return -1
+
+    def _admit(self) -> None:
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            hist = req.history
+            if not self.kv.can_admit(len(hist) + 1):
+                self.metrics["rejected_admissions"] += 1
+                break
+            if not self.kv.create(req.req_id, hist):
+                self.metrics["rejected_admissions"] += 1
+                break
+            self.waiting.pop(0)
+            # prefix reuse skips compute too — capped by what sharers
+            # have actually written (kv.lengths) — but the LAST history
+            # token is always recomputed: its logits seed the next
+            # sample.  Already-valid K/V is not re-written (the executor
+            # keeps those rows OOB).
+            req.computed = min(self.kv.lengths[req.req_id],
+                               len(hist) - 1)
+            req.created_len = len(hist)
+            req.slot = self._free_slot()
+            self.slots[req.slot] = req.req_id
+            self.running[req.req_id] = req
+            self.metrics["prefills"] += 1
+
+    def _preempt(self, req: Request) -> None:
+        """Out of pages: free everything, requeue AT THE FRONT keeping
+        the generated tokens (resume re-prefills prompt + out_tokens)."""
+        self.kv.free_seq(req.req_id)
+        self.slots[req.slot] = -1
+        req.slot = -1
+        req.computed = 0
+        del self.running[req.req_id]
+        self.waiting.insert(0, req)
+        self.metrics["preemptions"] += 1
+
+    # -- step planning ----------------------------------------------------
+    def plan(self) -> Optional[StepPlan]:
+        """Admit, pick spans under the token budget, maintain pages/COW,
+        and emit bucket-padded operands.  None = nothing runnable."""
+        self._admit()
+        if not self.running:
+            return None
+
+        spans: List[Span] = []
+        budget = self.token_budget
+        # FIFO: req ids are issued in submit order and survive preemption,
+        # so ascending id = oldest first (slot index does NOT track age —
+        # a young request can land in a freed low slot)
+        order = sorted((self.running[s] for s in self.slots if s >= 0),
+                       key=lambda r: r.req_id)
+        # decode spans first (liveliness)
+        for req in order:
+            if not req.in_decode or budget <= 0:
+                continue
+            span = self._reserve(req, req.computed + 1)
+            if span is not None:
+                spans.append(span)
+                budget -= 1
+        # prefill chunks with whatever budget remains
+        for req in order:
+            if req.req_id not in self.running or req.in_decode:
+                continue
+            if budget <= 0:
+                break
+            end = min(req.computed + min(self.chunk_size, budget),
+                      len(req.history))
+            span = self._reserve(req, end)
+            if span is not None:
+                spans.append(span)
+                budget -= span.end - span.start
+                self.metrics["prefill_chunks"] += 1
+
+        # liveliness: a STILL-decodable sequence (not OOM-preempted
+        # above) with no decode span this step is starvation
+        if not any(s.decode for s in spans) and any(
+                r.req_id in self.running and r.in_decode for r in order):
+            self.metrics["zero_decode_steps"] += 1
+        if not spans:
+            return None
+        return self._pad(spans)
+
+    def _reserve(self, req: Request, end: int) -> Optional[Span]:
+        """Allocate pages + COW-protect the span's written range; preempt
+        the request itself when the pool is dry."""
+        start = req.computed
+        write_from = max(start, self.kv.lengths[req.req_id])
+        divergent = end > req.created_len
+        if not self.kv.ensure_capacity(req.req_id, end) or \
+                not self.kv.make_writable(req.req_id, write_from,
+                                          max(end, write_from),
+                                          divergent=divergent):
+            self._preempt(req)
+            return None
+        last = len(req.history) - 1
+        return Span(req, start, end, sample=end > last,
+                    decode=req.in_decode)
+
+    def _pad(self, spans: List[Span]) -> StepPlan:
+        kv = self.kv
+        n = sum(s.end - s.start for s in spans)
+        t_bucket = pow2_bucket(n, self.min_t_bucket, self.token_budget)
+        max_pages = max(len(kv.tables[s.req.req_id]) for s in spans)
+        p_bucket = pow2_bucket(max_pages, self.min_p_bucket,
+                               pow2_bucket(self.max_pages_per_seq,
+                                           self.min_p_bucket, 1 << 30))
+
+        tokens = np.zeros(t_bucket, np.int32)
+        seg = np.full(t_bucket, -1, np.int32)
+        pos = np.zeros(t_bucket, np.int32)
+        oob = kv.pool.num_pages * kv.page_size
+        widx = np.full(t_bucket, oob, np.int32)
+        sample_idx = np.zeros(self.max_batch, np.int32)
+
+        cursor = 0
+        for s in spans:
+            hist = s.req.history
+            m = s.end - s.start
+            sl = slice(cursor, cursor + m)
+            tokens[sl] = hist[s.start:s.end]
+            seg[sl] = s.req.slot
+            pos[sl] = np.arange(s.start, s.end)
+            # reused-prefix tokens recomputed for logits keep their
+            # already-valid K/V: skip the write (stays OOB)
+            wfrom = max(s.start, kv.lengths[s.req.req_id])
+            if s.end > wfrom:
+                widx[cursor + (wfrom - s.start): cursor + m] = \
+                    kv.flat_slots(s.req.req_id, wfrom, s.end)
+            if s.sample:
+                sample_idx[s.req.slot] = cursor + m - 1
+            cursor += m
+        return StepPlan(spans=spans, slot_seqs=list(self.slots),
+                        tokens=tokens, seg_ids=seg, positions=pos,
+                        write_idx=widx, sample_idx=sample_idx,
+                        n_tokens=n, t_bucket=t_bucket, p_bucket=p_bucket)
+
+    # -- step commit ------------------------------------------------------
+    def commit(self, plan: StepPlan, next_tokens: np.ndarray
+               ) -> List[Request]:
+        """Apply a step's results: advance cursors/lengths, append
+        sampled tokens, retire finished requests (pages released for the
+        very next admission)."""
+        finished: List[Request] = []
+        for s in plan.spans:
+            req = s.req
+            req.computed = s.end
+            self.kv.advance(req.req_id, s.end)
+            if not s.sample:
+                continue
+            tok = int(next_tokens[req.slot])
+            req.out_tokens.append(tok)
+            if req.first_token_at is None:
+                req.first_token_at = time.perf_counter()
+            if s.decode:
+                self.metrics["decoded_tokens"] += 1
+            if req.done:
+                req.finished_at = time.perf_counter()
+                self.kv.free_seq(req.req_id)
+                self.slots[req.slot] = -1
+                req.slot = -1
+                del self.running[req.req_id]
+                finished.append(req)
+        self.metrics["steps"] += 1
+        return finished

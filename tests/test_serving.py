@@ -1,4 +1,6 @@
-"""Paged KV cache + continuous-batching engine."""
+"""Paged KV cache + scheduler/executor continuous-batching engine."""
+
+import random
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +11,7 @@ from repro.models.lm import (LMConfig, decode_step, forward, init_cache,
                              init_params)
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_cache import PagedKVCache, PagePool
+from repro.serving.legacy import LegacyServingEngine
 
 
 def tiny_cfg():
@@ -16,6 +19,26 @@ def tiny_cfg():
                     n_kv_heads=2, d_ff=128, vocab_size=97,
                     param_dtype=jnp.float32, remat="none",
                     attn_backend="ref")
+
+
+def dense_rollout(cfg, params, prompt, n_new):
+    """Greedy continuation via the dense-cache ``decode_step`` — the
+    oracle every engine path must reproduce token-for-token."""
+    cache = init_cache(cfg, 1, len(prompt) + n_new + 1, jnp.float32)
+    lg = None
+    for t, tok in enumerate(prompt):
+        lg, cache = decode_step(cfg, params, cache,
+                                jnp.asarray([[tok]]), jnp.int32(t))
+    seq = []
+    cur = int(jnp.argmax(lg[0, -1]))
+    pos = len(prompt)
+    for _ in range(n_new):
+        seq.append(cur)
+        lg, cache = decode_step(cfg, params, cache,
+                                jnp.asarray([[cur]]), jnp.int32(pos))
+        cur = int(jnp.argmax(lg[0, -1]))
+        pos += 1
+    return seq
 
 
 class TestPagePool:
@@ -164,6 +187,226 @@ class TestEngine:
                        param_dtype=jnp.float32, remat="none")
         with pytest.raises(ValueError, match="paged engine"):
             ServingEngine(cfg, {}, num_pages=4)
+
+
+class TestChunkedPrefill:
+    def test_long_prompt_does_not_block_decode(self):
+        """A long prompt prefills in chunks while short requests keep
+        decoding every step (no head-of-line blocking) — and everyone
+        still matches the dense oracle."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=96,
+                            max_batch=4, chunk_size=8, token_budget=16)
+        long_prompt = [(3 + 7 * i) % 97 for i in range(40)]
+        shorts = [[50 + i, 2, 3, 4, 5] for i in range(3)]
+        rid_long = eng.submit(long_prompt, max_new_tokens=4)
+        rid_short = [eng.submit(p, max_new_tokens=6) for p in shorts]
+        done = {r.req_id: r for r in eng.run()}
+        assert len(done) == 4
+        m = eng.metrics
+        assert m["prefill_chunks"] >= 5       # 40 tokens / 8-token chunks
+        assert m["zero_decode_steps"] == 0
+        # the shorts (submitted AFTER the long prompt) must not wait for
+        # its full prefill before their first token
+        for rid in rid_short:
+            assert done[rid].first_token_at < done[rid_long].first_token_at
+        assert done[rid_long].out_tokens == dense_rollout(
+            cfg, params, long_prompt, 4)
+        for rid, p in zip(rid_short, shorts):
+            assert done[rid].out_tokens == dense_rollout(cfg, params, p, 6)
+
+    def test_fifo_admission_order(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        # one slot: strict FIFO service order
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=64,
+                            max_batch=1)
+        rids = [eng.submit([10 + i, 3, 4], max_new_tokens=2)
+                for i in range(4)]
+        done = eng.run()
+        assert [r.req_id for r in done] == rids
+
+    def test_prefill_budget_is_fifo_not_slot_order(self):
+        """A newly admitted request landing in a freed LOW slot must not
+        steal the whole prefill budget from an older request still
+        prefilling in a higher slot."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=96,
+                            max_batch=2, chunk_size=8, token_budget=8)
+        long_a = [(3 + 7 * j) % 97 for j in range(40)]
+        long_b = [(5 + 11 * j) % 97 for j in range(40)]
+        rid_short = eng.submit([9, 8, 7], max_new_tokens=2)  # slot 0
+        rid_a = eng.submit(long_a, max_new_tokens=2)         # slot 1
+        rid_b = eng.submit(long_b, max_new_tokens=2)         # waits,
+        # then refills slot 0 mid-prefill of rid_a
+        done = eng.run()
+        assert [r.req_id for r in done] == [rid_short, rid_a, rid_b]
+
+    def test_bucketed_compiles_bounded(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=96,
+                            max_batch=4, chunk_size=8, token_budget=16,
+                            max_pages_per_seq=16)
+        prompts = [[(i * 11 + j) % 97 for j in range(3 + 5 * i)]
+                   for i in range(6)]
+        for p in prompts:
+            eng.submit(p, max_new_tokens=3)
+        done = eng.run()
+        assert len(done) == 6
+        assert 1 <= eng.metrics["bucket_compiles"] <= eng.bucket_count
+
+
+class TestPreemptionResume:
+    def test_preempted_request_resumes_without_data_loss(self):
+        """Regression for the preemption-data-loss bug: a requeued
+        request must re-prefill prompt + out_tokens and must NOT emit a
+        duplicate first token on resume."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        prompts = [[(5 + 13 * i + j) % 97 for j in range(8)]
+                   for i in range(2)]
+        # 16-token final histories x2 = 8 pages needed, pool of 6 forces
+        # a mid-decode preemption
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=6,
+                            max_batch=2)
+        rids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        done = {r.req_id: r for r in eng.run()}
+        assert len(done) == 2
+        assert eng.metrics["preemptions"] > 0
+        for rid, p in zip(rids, prompts):
+            assert done[rid].out_tokens == dense_rollout(cfg, params, p, 8)
+
+    def test_legacy_engine_resume_keeps_tokens(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        prompts = [[(5 + 13 * i + j) % 97 for j in range(8)]
+                   for i in range(2)]
+        eng = LegacyServingEngine(cfg, params, page_size=4, num_pages=6,
+                                  max_batch=2)
+        rids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        done = {r.req_id: r for r in eng.run()}
+        assert len(done) == 2
+        for rid, p in zip(rids, prompts):
+            assert done[rid].out_tokens == dense_rollout(cfg, params, p, 8)
+
+
+class TestPrefixSharingDivergence:
+    def test_shared_prefix_divergence_keeps_outputs_independent(self):
+        """Requests sharing dedup'd prompt pages must produce exactly
+        the tokens they'd produce alone — divergent decode writes land in
+        private pages (or COW copies), never in a sibling's."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        shared = [5, 6, 7, 8, 9, 10, 11, 12]    # 2 full pages at ps=4
+        prompts = [shared + [30 + i] for i in range(3)]
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=64,
+                            max_batch=4)
+        rids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        done = {r.req_id: r for r in eng.run()}
+        assert eng.kv.pool.stats.prefix_hits > 0
+        for rid, p in zip(rids, prompts):
+            assert done[rid].out_tokens == dense_rollout(cfg, params, p, 5)
+
+    def test_page_aligned_full_reuse_recomputes_last_token(self):
+        """A page-aligned fully-reused prompt still yields a first token:
+        the last prompt token is recomputed for logits with its write
+        skipped (the shared page is not COW-split)."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        prompt = [5, 6, 7, 8, 9, 10, 11, 12]
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=64,
+                            max_batch=2)
+        eng.submit(prompt, max_new_tokens=4)
+        done1 = eng.run()
+        # second identical request: full-page prefix hit on VALID pages
+        eng.submit(prompt, max_new_tokens=4)
+        done2 = eng.run()
+        oracle = dense_rollout(cfg, params, prompt, 4)
+        assert done1[0].out_tokens == oracle
+        assert done2[0].out_tokens == oracle
+        assert eng.kv.pool.stats.cow_copies == 0
+
+    def test_stale_prefix_index_entry_never_hits(self):
+        """Generation stamps: a freed page reallocated with different
+        content must not serve a prefix hit for its old hash."""
+        kv = PagedKVCache(n_layers=1, n_kv_heads=2, head_dim=8,
+                          page_size=4, num_pages=4, dtype=jnp.float32)
+        assert kv.create(0, list(range(8)))
+        kv.advance(0, 8)
+        kv.free_seq(0)
+        # reallocate the same physical pages for different tokens
+        assert kv.create(1, list(range(50, 58)))
+        kv.advance(1, 8)
+        hits_before = kv.pool.stats.prefix_hits
+        assert kv.create(2, list(range(8)))      # old hash, stale pages
+        assert kv.pool.stats.prefix_hits == hits_before
+        assert set(kv.tables[2]).isdisjoint(set(kv.tables[1]))
+
+
+class TestRefcountConservation:
+    def test_randomized_workload_conserves_pages(self):
+        """allocated == freed + held at every point of a randomized
+        submit/run/finish trace, and the pool drains to empty."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=24,
+                            max_batch=3, chunk_size=4, token_budget=8)
+        rng = random.Random(1234)
+        submitted = 0
+        finished = []
+        for step in range(200):
+            if submitted < 12 and rng.random() < 0.4:
+                n = rng.randint(1, 14)
+                base = rng.choice([0, 40])       # some shared prefixes
+                eng.submit([(base + j) % 97 for j in range(n)],
+                           max_new_tokens=rng.randint(1, 5))
+                submitted += 1
+            finished.extend(eng.step())
+            st = eng.kv.pool.stats
+            held = len(eng.kv.pool.refs)
+            assert st.allocated_pages == st.freed_pages + held
+            assert held + eng.kv.pool.num_free == eng.kv.pool.num_pages
+            if submitted >= 12 and not eng.waiting and not eng.running:
+                break
+        finished.extend(eng.run())
+        assert len(finished) == 12
+        st = eng.kv.pool.stats
+        assert st.allocated_pages == st.freed_pages
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+
+class TestMixedAttentionKernel:
+    def test_matches_reference(self):
+        from repro.kernels import ops as kops
+        from repro.models.attention import mixed_attention
+        s, hkv, l, d, hq, t = 3, 2, 32, 16, 4, 7
+        kc = jax.random.normal(jax.random.key(0), (s, hkv, l, d))
+        vc = jax.random.normal(jax.random.key(1), (s, hkv, l, d))
+        q = jax.random.normal(jax.random.key(2), (t, hq, d))
+        seg = jnp.asarray([0, 0, 1, 2, 2, 2, -1], jnp.int32)
+        pos = jnp.asarray([3, 4, 0, 10, 11, 12, 0], jnp.int32)
+        for window in (None, 4):
+            ref = mixed_attention(q, kc, vc, seg, pos, backend="ref",
+                                  window=window)
+            ker = kops.mixed_attention(q, kc, vc, seg, pos,
+                                       window=window)
+            np.testing.assert_allclose(np.asarray(ref), np.asarray(ker),
+                                       atol=2e-5, rtol=2e-5)
+
+
+class TestDonationInvariant:
+    def test_taken_kv_cannot_be_aliased(self):
+        kv = PagedKVCache(n_layers=1, n_kv_heads=2, head_dim=8,
+                          page_size=4, num_pages=4, dtype=jnp.float32)
+        ks, vs = kv.take_kv()
+        with pytest.raises(AssertionError):
+            kv.take_kv()
+        kv.put_kv(ks, vs)
+        ks2, _ = kv.take_kv()
+        assert ks2 is not None
 
 
 class TestPagePoolProperties:
