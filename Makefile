@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test gradcheck conformance bench-smoke bench lint
+.PHONY: test gradcheck conformance bench-smoke bench lint docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,6 +23,11 @@ bench-smoke:
 bench:
 	$(PY) -m benchmarks.run
 
+# documentation gates: README/docs snippets must RUN, public API must
+# carry docstrings (tools/check_docs.py)
+docs:
+	$(PY) tools/check_docs.py
+
 lint:
-	$(PY) -m compileall -q src benchmarks tests
+	$(PY) -m compileall -q src benchmarks tests tools
 	@$(PY) -c "import pathlib,sys; bad=[f'{p}:{i}: line too long ({len(l)})' for p in pathlib.Path('src').rglob('*.py') for i,l in enumerate(p.read_text().splitlines(),1) if len(l)>100]; print('\n'.join(bad) or 'lint clean'); sys.exit(1 if bad else 0)"

@@ -38,6 +38,13 @@ else:
 
 GATE = {}
 
+# PR 3 unified-engine decode throughput on this workload (the committed
+# benchmarks/out/serving.json before the paged-attention/delta-upload
+# change).  delta_vs_pr3 RECORDS the change for trend tracking; it is
+# machine-specific, so CI asserts the same-machine relative gates
+# (speedup vs legacy, table_upload_rows) rather than this constant.
+PR3_TOKENS_PER_S = 1222.4
+
 
 def bench_cfg():
     return LMConfig(name="bench-serve", n_layers=2, d_model=128,
@@ -106,6 +113,8 @@ def bench_engines(quick: bool) -> None:
         "tokens_per_s": round(tps_new, 1),
         "tokens_per_s_legacy": round(tps_old, 1),
         "speedup": round(tps_new / tps_old, 2),
+        "tokens_per_s_pr3_baseline": PR3_TOKENS_PER_S,
+        "delta_vs_pr3": round(tps_new / PR3_TOKENS_PER_S - 1, 3),
         "ttft_mean_s": round(ttft_mean, 4),
         "recompiles": m["bucket_compiles"],
         "bucket_count": eng.bucket_count,
@@ -113,6 +122,13 @@ def bench_engines(quick: bool) -> None:
         "preemptions": m["preemptions"],
         "prefill_chunks": m["prefill_chunks"],
         "page_hwm": m["page_hwm"],
+        # delta-mirror gate: host->device block-table rows must stay
+        # O(changed rows); whole-table re-uploads would cost about
+        # steps * max_batch rows on this workload
+        "table_upload_rows": m["table_upload_rows"],
+        "table_full_rebuilds": m["table_full_rebuilds"],
+        "steps": m["steps"],
+        "max_batch": eng.max_batch,
     })
     emit("serving/unified", t_new,
          f"{tps_new:.1f} tok/s; ttft={ttft_mean * 1e3:.1f}ms; "

@@ -39,6 +39,7 @@ _tls = threading.local()
 
 
 def is_grad_enabled() -> bool:
+    """Whether ops currently record autograd tape nodes (thread-local)."""
     return getattr(_tls, "grad_enabled", True)
 
 
@@ -66,11 +67,17 @@ class _GradMode:
 
 
 class no_grad(_GradMode):
+    """Context manager / decorator disabling tape recording:
+    ``with repro.no_grad(): ...`` — inference runs allocate no graph."""
+
     def __init__(self):
         super().__init__(False)
 
 
 class enable_grad(_GradMode):
+    """Context manager / decorator re-enabling tape recording inside an
+    outer ``no_grad`` scope."""
+
     def __init__(self):
         super().__init__(True)
 

@@ -257,6 +257,8 @@ def dispatch_cache_stats() -> Dict[str, Any]:
 
 
 def reset_dispatch_cache() -> None:
+    """Drop every cached op/VJP executable and zero the hit/miss
+    counters (see ``repro.dispatch_cache_stats()``)."""
     _cache.clear()
 
 

@@ -32,6 +32,10 @@ from . import allocator as _alloc
 
 
 class Stream:
+    """An ordered queue of device work (§5.1): ops enqueue results here
+    so the host can run ahead; ``synchronize()`` joins the tail.  The
+    caching allocator keeps one block pool per stream."""
+
     _next_id = 0
     _lock = threading.Lock()
 
@@ -89,6 +93,10 @@ class Stream:
 
 
 class Event:
+    """Marker on a stream's work (torch.cuda.Event): ``record()`` then
+    ``wait()``/``synchronize()``/``query()``; with
+    ``enable_timing=True``, ``elapsed_time()`` gives milliseconds."""
+
     def __init__(self, enable_timing: bool = False):
         self.enable_timing = enable_timing
         self._recorded: Optional[List[Any]] = None
@@ -131,10 +139,13 @@ _default_stream = Stream()
 
 
 def default_stream() -> Stream:
+    """The process-wide stream ops run on outside ``with stream(s):``."""
     return _default_stream
 
 
 def current_stream() -> Stream:
+    """The stream new work lands on in this thread (default unless a
+    ``with repro.stream(s):`` scope is active)."""
     return getattr(_tls, "stream", _default_stream)
 
 

@@ -126,6 +126,17 @@ def _is_tracer(x: Any) -> bool:
 # ----------------------------------------------------------------------
 
 class Tensor:
+    """Operator-overloaded eager tensor over a ``jax.Array``.
+
+    The define-by-run surface of the framework: arithmetic/indexing
+    build autograd tape nodes as they execute, ``backward()`` walks the
+    tape, in-place ops bump a version counter so stale autograd
+    references fail loudly, and views write through to their base.
+    Ops dispatch through the signature-keyed executable cache
+    (``core.dispatch``); inside ``with repro.fuse.fusion():``
+    elementwise chains defer and flush as one fused kernel.
+    """
+
     __slots__ = (
         "_d",           # the jax.Array (None while a fusion chain pends)
         "_pending",     # fuse.PendingOp when lazily enqueued, else None
@@ -930,22 +941,26 @@ def pow_(a, b):
 
 
 def matmul(a, b):
+    """Matrix product ``a @ b`` (same as the ``@`` operator)."""
     a = _coerce(a)
     b = _coerce(b, like=a)
     return _apply_op("matmul", jnp.matmul, a, b, static=())
 
 
 def maximum(a, b):
+    """Elementwise maximum of two tensors (broadcasting)."""
     a, b = _coerce(a), _coerce(b)
     return _apply_op("maximum", jnp.maximum, a, b, static=())
 
 
 def minimum(a, b):
+    """Elementwise minimum of two tensors (broadcasting)."""
     a, b = _coerce(a), _coerce(b)
     return _apply_op("minimum", jnp.minimum, a, b, static=())
 
 
 def where(cond, a, b):
+    """Elementwise select: ``a`` where ``cond`` is true, else ``b``."""
     cond = _coerce(cond)
     a = _coerce(a)
     b = _coerce(b, like=a)
@@ -953,6 +968,7 @@ def where(cond, a, b):
 
 
 def cat(tensors: Sequence[Tensor], dim: int = 0) -> Tensor:
+    """Concatenate tensors along ``dim`` (alias: ``concat``)."""
     tensors = [_coerce(t) for t in tensors]
     return _apply_op("cat", lambda *xs: jnp.concatenate(xs, axis=dim),
                      *tensors, static=(dim,))
@@ -962,12 +978,15 @@ concat = cat
 
 
 def stack(tensors: Sequence[Tensor], dim: int = 0) -> Tensor:
+    """Stack tensors along a NEW axis ``dim``."""
     tensors = [_coerce(t) for t in tensors]
     return _apply_op("stack", lambda *xs: jnp.stack(xs, axis=dim),
                      *tensors, static=(dim,))
 
 
 def split(t: Tensor, size: int, dim: int = 0):
+    """Split ``t`` into chunks of ``size`` along ``dim`` (last chunk
+    may be smaller).  Returns a tuple of views."""
     n = t.shape[dim]
     pieces = []
     for start in range(0, n, size):
@@ -978,6 +997,7 @@ def split(t: Tensor, size: int, dim: int = 0):
 
 
 def einsum(subscripts: str, *tensors) -> Tensor:
+    """Einstein-summation contraction, e.g. ``einsum("ij,jk->ik", a, b)``."""
     tensors = [_coerce(t) for t in tensors]
     return _apply_op("einsum",
                      lambda *xs: jnp.einsum(subscripts, *xs), *tensors,
@@ -985,6 +1005,7 @@ def einsum(subscripts: str, *tensors) -> Tensor:
 
 
 def logsumexp(t: Tensor, dim=None, keepdim: bool = False) -> Tensor:
+    """Numerically stable ``log(sum(exp(t)))`` over ``dim``."""
     return _apply_op(
         "logsumexp",
         lambda x: jax.scipy.special.logsumexp(x, axis=dim, keepdims=keepdim),
@@ -1016,26 +1037,32 @@ def relu(t):
 
 
 def softmax(t, dim: int = -1):
+    """Softmax over ``dim`` (statistics computed in f32)."""
     return _coerce(t).softmax(dim)
 
 
 def tril(t, k: int = 0):
+    """Lower-triangular part of ``t`` (zero above diagonal ``k``)."""
     return _apply_op("tril", lambda x: jnp.tril(x, k), _coerce(t),
                      static=(k,))
 
 
 def triu(t, k: int = 0):
+    """Upper-triangular part of ``t`` (zero below diagonal ``k``)."""
     return _apply_op("triu", lambda x: jnp.triu(x, k), _coerce(t),
                      static=(k,))
 
 
 def take_along_dim(t, indices, dim: int):
+    """Gather values along ``dim`` at ``indices`` (torch.take_along_dim;
+    indices ride as a non-differentiable operand, never a static)."""
     return _apply_op("take_along_dim",
                      lambda x, i: jnp.take_along_axis(x, i, axis=dim),
                      _coerce(t), _coerce(indices), static=(dim,))
 
 
 def one_hot(t, num_classes: int, dtype=jnp.float32):
+    """One-hot encode integer tensor ``t`` to ``num_classes`` columns."""
     return Tensor(jax.nn.one_hot(_raw(t), num_classes, dtype=dtype))
 
 
@@ -1054,6 +1081,8 @@ _np_rng = np.random.default_rng(0)
 
 
 def manual_seed(seed: int) -> None:
+    """Re-seed the host RNG behind ``randn``/``rand``/``randint``/
+    ``normal``/``uniform`` (reproducible eager initialization)."""
     global _np_rng
     with _rng_lock:
         _np_rng = np.random.default_rng(seed)
@@ -1067,55 +1096,67 @@ def _factory(arr, dtype=None, requires_grad: bool = False) -> Tensor:
 
 
 def tensor(data, dtype=None, requires_grad: bool = False) -> Tensor:
+    """Build a Tensor from array-like ``data`` (list, numpy, scalar)."""
     return _factory(data, dtype, requires_grad)
 
 
 def zeros(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    """All-zeros tensor of ``shape``."""
     return Tensor(jnp.zeros(_norm_shape(shape), dtype), requires_grad)
 
 
 def ones(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    """All-ones tensor of ``shape``."""
     return Tensor(jnp.ones(_norm_shape(shape), dtype), requires_grad)
 
 
 def full(shape, fill_value, dtype=jnp.float32,
          requires_grad: bool = False) -> Tensor:
+    """Tensor of ``shape`` filled with ``fill_value``."""
     return Tensor(jnp.full(shape, fill_value, dtype), requires_grad)
 
 
 def empty(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    """Uninitialized-by-contract tensor (zeros under XLA)."""
     return zeros(*shape, dtype=dtype, requires_grad=requires_grad)
 
 
 def zeros_like(t, dtype=None) -> Tensor:
+    """All-zeros tensor with ``t``'s shape (and dtype unless given)."""
     return Tensor(jnp.zeros_like(_raw(t), dtype=dtype))
 
 
 def ones_like(t, dtype=None) -> Tensor:
+    """All-ones tensor with ``t``'s shape (and dtype unless given)."""
     return Tensor(jnp.ones_like(_raw(t), dtype=dtype))
 
 
 def arange(*args, dtype=None) -> Tensor:
+    """``arange(stop)`` / ``arange(start, stop[, step])`` range tensor."""
     return Tensor(jnp.arange(*args, dtype=dtype))
 
 
 def eye(n, m=None, dtype=jnp.float32) -> Tensor:
+    """Identity matrix of shape (n, m or n)."""
     return Tensor(jnp.eye(n, m, dtype=dtype))
 
 
 def randn(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    """Standard-normal tensor of ``shape`` (host RNG; ``manual_seed``)."""
     with _rng_lock:
         arr = _np_rng.standard_normal(_norm_shape(shape), dtype=np.float32)
     return _factory(arr, dtype, requires_grad)
 
 
 def rand(*shape, dtype=jnp.float32, requires_grad: bool = False) -> Tensor:
+    """Uniform-[0, 1) tensor of ``shape`` (host RNG; ``manual_seed``)."""
     with _rng_lock:
         arr = _np_rng.random(_norm_shape(shape), dtype=np.float32)
     return _factory(arr, dtype, requires_grad)
 
 
 def randint(low, high, shape, dtype=jnp.int32) -> Tensor:
+    """Integer tensor uniform in [low, high) of ``shape``."""
     with _rng_lock:
         arr = _np_rng.integers(low, high, size=shape)
     return _factory(arr, dtype)
@@ -1123,6 +1164,7 @@ def randint(low, high, shape, dtype=jnp.int32) -> Tensor:
 
 def normal(mean: float, std: float, shape, dtype=jnp.float32,
            requires_grad: bool = False) -> Tensor:
+    """Normal(mean, std) tensor of ``shape`` (host RNG; ``manual_seed``)."""
     with _rng_lock:
         arr = _np_rng.normal(mean, std, size=shape).astype(np.float32)
     return _factory(arr, dtype, requires_grad)
@@ -1130,6 +1172,7 @@ def normal(mean: float, std: float, shape, dtype=jnp.float32,
 
 def uniform(low: float, high: float, shape, dtype=jnp.float32,
             requires_grad: bool = False) -> Tensor:
+    """Uniform-[low, high) tensor of ``shape`` (host RNG; ``manual_seed``)."""
     with _rng_lock:
         arr = _np_rng.uniform(low, high, size=shape).astype(np.float32)
     return _factory(arr, dtype, requires_grad)

@@ -1,11 +1,17 @@
-"""Decode + mixed-batch attention kernels (Pallas/TPU).
+"""Decode + mixed-batch + paged attention kernels (Pallas/TPU).
 
 ``decode_attention_fwd``: one new query token per sequence attends over a
 (B, Hkv, Smax, D) KV cache filled to ``cache_len[b]`` positions.
 ``mixed_attention_fwd``: a FLAT padded token batch (prefill chunks mixed
 with decode tokens — the serving executor's unified step) where token t
 selects its sequence's cache row via a scalar-prefetched segment id and
-masks keys past its own position.  TPU adaptation of flash-decoding:
+masks keys past its own position.
+``paged_attention_fwd``: the same flat mixed batch, but attending the
+PHYSICAL KV page pool directly — the block table rides in as a
+scalar-prefetch operand and the KV BlockSpec index map resolves
+(slot, page-position) -> physical page id before the body runs, so no
+contiguous per-slot cache is ever gathered.  TPU adaptation of
+flash-decoding:
 
   * grid = (B, Hkv, Smax/block_k) with the KV sweep as the sequential
     dimension; online-softmax stats live in VMEM scratch,
@@ -227,3 +233,110 @@ def mixed_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
         name="mixed_attention_fwd",
     )(jnp.asarray(seg_ids, jnp.int32), jnp.asarray(positions, jnp.int32),
       q, k_cache, v_cache)
+
+
+def _paged_kernel(tbl_ref, seg_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, window: Optional[int], page_size: int):
+    t = pl.program_id(0)
+    pi = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[t]
+    k_start = pi * page_size
+    # page pi of token t's sequence covers key positions
+    # [pi*ps, (pi+1)*ps); only pages at or before the token's own
+    # position hold live keys (causal).  Padding tokens (seg<0) route
+    # to page-table row 0 and the caller discards their output.
+    run = k_start <= pos
+    if window is not None:
+        run = jnp.logical_and(run, k_start + page_size > pos - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0]                               # (G, D)
+        k = k_ref[0, :, 0]                            # (ps, D)
+        v = v_ref[0, :, 0]
+        scores = pl.dot(q, k, trans_b=True).astype(jnp.float32) * scale
+
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 1)
+        mask = k_pos <= pos
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > pos - window)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        p = jnp.exp(scores - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = jnp.broadcast_to(
+            alpha * l_scr[:, :1] + jnp.sum(p, axis=-1, keepdims=True),
+            l_scr.shape)
+        acc_scr[...] = acc_scr[...] * alpha + pl.dot(
+            p.astype(v.dtype), v).astype(jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(pi == np_ - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, tables: jnp.ndarray,
+                        seg_ids: jnp.ndarray, positions: jnp.ndarray, *,
+                        scale: float, window: Optional[int] = None,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (T, Hkv, G, D) — per-token query heads grouped by KV head;
+    k_pages/v_pages: (N, ps, Hkv, D) — the PHYSICAL page pool, not a
+    gathered per-slot cache; tables: (S, P) int32 block tables;
+    seg_ids/positions: (T,) int32.  All three index operands are
+    scalar-prefetched: the KV BlockSpec index map reads
+    ``tables[seg_ids[t], pi]`` before the body runs, so each grid step
+    DMAs exactly one physical page into VMEM — the gather disappears
+    into the memory system.  Returns (T, Hkv, G, D)."""
+    t, hkv, g, d = q.shape
+    n_pages, ps = k_pages.shape[0], k_pages.shape[1]
+    s_slots, p_pages = tables.shape
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               page_size=ps)
+
+    def kv_map(ti, h, pi, tbl, seg, pos):
+        slot = jnp.clip(seg[ti], 0, s_slots - 1)
+        return (tbl[slot, pi], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t, hkv, p_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda ti, h, pi, tbl, seg, pos: (ti, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda ti, h, pi, tbl, seg, pos:
+                               (ti, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, hkv, g, d), q.dtype),
+        interpret=interpret,
+        name="paged_attention_fwd",
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(seg_ids, jnp.int32),
+      jnp.asarray(positions, jnp.int32), q, k_pages, v_pages)

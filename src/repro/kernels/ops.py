@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .decode_attention import decode_attention_fwd, mixed_attention_fwd
+from .decode_attention import (decode_attention_fwd, mixed_attention_fwd,
+                               paged_attention_fwd)
 from .flash_attention import flash_attention_fwd
 from .mamba import mamba_scan_fwd
 from .rwkv6 import rwkv6_scan_fwd
@@ -137,6 +138,36 @@ def mixed_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
 
     out = mixed_attention_fwd(
         qg, kp, vp, jnp.asarray(seg_ids, jnp.int32),
+        jnp.asarray(positions, jnp.int32), scale=eff_scale,
+        window=window, interpret=_interpret())
+    return out[..., :d].reshape(t, hq, d)
+
+
+# ----------------------------------------------------------------------
+# paged attention (serving unified step, block table on device)
+# ----------------------------------------------------------------------
+
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, tables: jnp.ndarray,
+                    seg_ids: jnp.ndarray, positions: jnp.ndarray,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """q: (T, Hq, D) flat token batch vs the PHYSICAL page pool
+    (N, ps, Hkv, D); tables (S, P), seg_ids/positions (T,) int32 ride as
+    scalar-prefetch operands so the kernel's index maps resolve
+    slot -> page id before each body runs.  Inference-only (no vjp)."""
+    t, hq, d = q.shape
+    _, ps, hkv, _ = k_pages.shape
+    g = hq // hkv
+    eff_scale = scale if scale is not None else d ** -0.5
+
+    qg = _pad_last(q.reshape(t, hkv, g, d), LANE)
+    kp = _pad_last(k_pages, LANE)
+    vp = _pad_last(v_pages, LANE)
+
+    out = paged_attention_fwd(
+        qg, kp, vp, jnp.asarray(tables, jnp.int32),
+        jnp.asarray(seg_ids, jnp.int32),
         jnp.asarray(positions, jnp.int32), scale=eff_scale,
         window=window, interpret=_interpret())
     return out[..., :d].reshape(t, hq, d)

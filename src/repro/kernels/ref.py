@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from ..models.attention import decode_attention as _decode_ref
+from ..models.attention import paged_attention as _paged_ref
 from ..models.attention import sdpa_ref as _sdpa_ref
 from ..models.layers import _ssm_scan_ref, _wkv6_ref
 
@@ -30,6 +31,18 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      window: Optional[int] = None) -> jnp.ndarray:
     return _decode_ref(q, k_cache, v_cache, cache_len, scale=scale,
                        window=window, backend="ref")
+
+
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, tables: jnp.ndarray,
+                    seg_ids: jnp.ndarray, positions: jnp.ndarray,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """q: (T, Hq, D) vs the physical page pool (N, ps, Hkv, D) via
+    (S, P) block tables — gather-then-attend oracle for the Pallas
+    block-table-prefetching kernel."""
+    return _paged_ref(q, k_pages, v_pages, tables, seg_ids, positions,
+                      scale=scale, window=window, backend="ref")
 
 
 def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

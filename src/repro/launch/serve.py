@@ -84,7 +84,7 @@ def main() -> None:
         **{k: m[k] for k in ("steps", "prefills", "prefill_chunks",
                              "preemptions", "zero_decode_steps",
                              "decoded_tokens", "page_hwm",
-                             "prefix_hit_rate")},
+                             "table_upload_rows", "prefix_hit_rate")},
     }
     for k, v in report.items():
         print(f"{k:>22}: {v}")

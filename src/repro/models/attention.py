@@ -200,6 +200,60 @@ def mixed_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     return jnp.einsum("thl,thld->thd", probs, v)
 
 
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, tables: jnp.ndarray,
+                    seg_ids: jnp.ndarray, positions: jnp.ndarray,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None,
+                    backend: str = "auto") -> jnp.ndarray:
+    """Mixed prefill/decode attention DIRECTLY over the physical KV page
+    pool — no per-slot contiguous cache is materialized.
+
+    q: (T, Hq, D) — one query per scheduled token; k_pages/v_pages:
+    (N, ps, Hkv, D) — the page arrays exactly as ``PagedKVCache`` stores
+    them; tables: (S, P) int32 device block tables (row s = slot s's
+    physical page ids, padded with 0); seg_ids: (T,) slot per token
+    (<0 = padding); positions: (T,) absolute position in the sequence.
+    Token t attends slot seg_ids[t]'s pages at key positions <=
+    positions[t].  Returns (T, Hq, D).
+
+    Backends: "pallas" runs the block-table-prefetching kernel (the
+    production TPU path: the table lookup happens in the BlockSpec index
+    map, so only live pages are ever DMA'd); "ref"/fallback gathers
+    (S, P*ps) page rows with one ``jnp.take`` and reduces to
+    ``mixed_attention`` — the oracle, and the XLA-fused CPU path.
+    """
+    t, hq, d = q.shape
+    n_pages, ps, hkv, _ = k_pages.shape
+    s, p = tables.shape
+    scale = scale if scale is not None else d ** -0.5
+
+    # auto: take the kernel only when head_dim is lane-aligned — for
+    # d % 128 != 0 the wrapper would lane-pad (copy) the ENTIRE page
+    # pool per layer per step, costing more than the gather it saves
+    if backend == "pallas" or (backend == "auto" and d % 128 == 0):
+        try:
+            from ..kernels import ops as kops
+            return kops.paged_attention(q, k_pages, v_pages, tables,
+                                        seg_ids, positions, scale=scale,
+                                        window=window)
+        except Exception:
+            if backend == "pallas":
+                raise
+
+    gidx = (tables[:, :, None] * ps
+            + jnp.arange(ps)[None, None, :]).reshape(s, p * ps)
+    kf = k_pages.reshape(n_pages * ps, hkv, d)
+    vf = v_pages.reshape(n_pages * ps, hkv, d)
+    k_cache = jnp.take(kf, gidx, axis=0).transpose(0, 2, 1, 3)
+    v_cache = jnp.take(vf, gidx, axis=0).transpose(0, 2, 1, 3)
+    # keep the caller's backend: under "auto" with a non-lane-aligned
+    # head_dim the gather feeds the Pallas mixed_attention kernel —
+    # exactly the pre-paged executor path
+    return mixed_attention(q, k_cache, v_cache, seg_ids, positions,
+                           scale=scale, window=window, backend=backend)
+
+
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, cache_len,
                      scale: Optional[float] = None,

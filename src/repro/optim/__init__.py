@@ -164,6 +164,10 @@ class Optimizer:
 
 
 class SGD(Optimizer):
+    """SGD with momentum/Nesterov/weight decay (torch.optim.SGD);
+    ``foreach=True`` (default) runs one fused update over dtype-bucketed
+    concatenated leaves instead of a per-parameter loop."""
+
     def __init__(self, params, lr: float = 1e-3, momentum: float = 0.0,
                  weight_decay: float = 0.0, nesterov: bool = False,
                  dampening: float = 0.0, foreach: bool = True):
@@ -175,6 +179,9 @@ class SGD(Optimizer):
 
 
 class Adam(Optimizer):
+    """Adam with COUPLED (L2) weight decay (torch.optim.Adam);
+    ``foreach=True`` fuses the update across parameters."""
+
     def __init__(self, params, lr: float = 1e-3, betas=(0.9, 0.999),
                  eps: float = 1e-8, weight_decay: float = 0.0,
                  foreach: bool = True):
@@ -185,6 +192,9 @@ class Adam(Optimizer):
 
 
 class AdamW(Optimizer):
+    """Adam with DECOUPLED weight decay (torch.optim.AdamW);
+    ``state_dtype`` stores moments in a reduced precision."""
+
     def __init__(self, params, lr: float = 1e-3, betas=(0.9, 0.999),
                  eps: float = 1e-8, weight_decay: float = 0.01,
                  state_dtype=None, foreach: bool = True):
@@ -196,6 +206,9 @@ class AdamW(Optimizer):
 
 
 class Adafactor(Optimizer):
+    """Memory-factored Adam variant: second moments stored as row/col
+    factors for 2-D parameters (sublinear optimizer state)."""
+
     def __init__(self, params, lr: float = 1e-2, decay: float = 0.8,
                  clip_threshold: float = 1.0, weight_decay: float = 0.0,
                  foreach: bool = True):
@@ -209,6 +222,8 @@ class Adafactor(Optimizer):
 
 def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
                     min_ratio: float = 0.1) -> Callable[[Any], Any]:
+    """Linear warmup then cosine decay to ``min_ratio * base_lr``;
+    returns a jit-safe ``step -> lr`` function."""
     def f(step):
         step = jnp.asarray(step, jnp.float32)
         warm = base_lr * step / jnp.maximum(warmup_steps, 1)

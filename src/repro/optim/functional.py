@@ -375,12 +375,15 @@ def make_optimizer(name: str, foreach: bool = False, **hparams):
 
 
 def global_norm(tree) -> jnp.ndarray:
+    """L2 norm over every leaf of a gradient pytree (f32 accumulate)."""
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                         for l in leaves))
 
 
 def clip_by_global_norm(tree, max_norm: float):
+    """Scale the whole pytree so its global norm is <= ``max_norm``;
+    returns (clipped tree, pre-clip norm)."""
     norm = global_norm(tree)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
     return tree_map(lambda g: g * scale, tree), norm

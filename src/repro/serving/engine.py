@@ -66,11 +66,16 @@ class ServingEngine:
             self.kv, max_batch=max_batch, chunk_size=chunk_size,
             token_budget=token_budget,
             max_pages_per_seq=max_pages_per_seq)
+        # size the device table mirror at the pages bucket cap up front:
+        # the delta path then never pays a width-growth rebuild
+        self.kv.mirror_width_hint = self.scheduler.p_buckets()[-1]
         self.executor = Executor(cfg, params)
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: Sequence[int],
                max_new_tokens: int = 16) -> int:
+        """Queue a request; returns its request id.  Admission happens
+        lazily at the next step, when pages are available."""
         return self.scheduler.submit(prompt, max_new_tokens)
 
     def _step(self) -> Optional[List[Request]]:
@@ -83,9 +88,14 @@ class ServingEngine:
         return self.scheduler.commit(plan, next_tokens)
 
     def step(self) -> List[Request]:
+        """Run one continuous-batching step; returns the requests that
+        finished this step (empty when nothing is runnable)."""
         return self._step() or []
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Step until every submitted request finishes (or nothing is
+        runnable / ``max_steps`` elapse); returns finished requests in
+        completion order."""
         finished: List[Request] = []
         for _ in range(max_steps):
             if not self.scheduler.waiting and not self.scheduler.running:
@@ -110,9 +120,17 @@ class ServingEngine:
 
     @property
     def metrics(self) -> Dict[str, Any]:
+        """Counter snapshot: scheduler counters (``steps``,
+        ``prefill_chunks``, ``preemptions``, ``zero_decode_steps``, ...)
+        plus ``bucket_compiles`` (jitted ``unified_step`` variants — must
+        stay ≤ :attr:`bucket_count`), ``page_hwm`` (live-page high-water
+        mark) and ``table_upload_rows`` (host→device block-table rows
+        flushed by the delta mirror — O(changed rows), the CI bound)."""
         m = dict(self.scheduler.metrics)
         m["bucket_compiles"] = self.executor.compile_count
         m["page_hwm"] = self.kv.pool.stats.page_hwm
+        m["table_upload_rows"] = self.kv.upload_rows_total
+        m["table_full_rebuilds"] = self.kv.upload_full_rebuilds
         return m
 
     @property
@@ -120,4 +138,6 @@ class ServingEngine:
         return self.scheduler.bucket_count
 
     def stats(self) -> Dict[str, Any]:
+        """:attr:`metrics` merged with the page-pool memory stats
+        (pages used/free, prefix hit rate, COW copies, ...)."""
         return {**self.metrics, **self.kv.memory_stats()}

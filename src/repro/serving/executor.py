@@ -10,8 +10,10 @@ runs the whole step's compute as a single XLA executable:
     (``write_idx`` precomputed on host; out-of-bounds rows drop — the
     padding/reused-prefix skip), replacing the O(prompt_len × layers)
     host round-trips of the old ``_prefill``,
-  * paged KV is gathered per-slot from the device block-table mirror and
-    attended with ``mixed_attention`` (per-token segment ids/positions),
+  * attention reads the KV pages DIRECTLY through the device block-table
+    mirror via ``paged_attention`` (per-token segment ids/positions; on
+    TPU the Pallas kernel scalar-prefetches the table and DMAs only live
+    pages — no per-slot contiguous cache is ever gathered),
   * the KV page arrays are DONATED: ``unified_step`` consumes them and
     returns the updated pair; while the step runs the host holds no
     alias (``PagedKVCache.take_kv``/``put_kv`` enforce this).
@@ -34,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import layers as L
-from ..models.attention import mixed_attention
+from ..models.attention import paged_attention
 from ..models import lm as LM
 from .kv_cache import PagedKVCache
 from .scheduler import StepPlan
@@ -65,7 +67,11 @@ class Executor:
         self.cfg = cfg
         self.params = params
         self._layer_params = split_layer_params(cfg, params)
-        self._step = jax.jit(self._unified_step, donate_argnums=(0, 1))
+        # p_bucket is static: the full-width device table mirror is
+        # narrowed to the step's page bucket INSIDE the jit (free), so
+        # the host never slices/re-uploads tables per step
+        self._step = jax.jit(self._unified_step, static_argnums=(0,),
+                             donate_argnums=(1, 2))
         self._compiled: set = set()
 
     @property
@@ -81,7 +87,7 @@ class Executor:
         ks, vs = kv.take_kv()
         try:
             next_tokens, ks, vs = self._step(
-                ks, vs,
+                plan.p_bucket, ks, vs,
                 jnp.asarray(plan.tokens), jnp.asarray(plan.seg_ids),
                 jnp.asarray(plan.positions), jnp.asarray(plan.write_idx),
                 tables, jnp.asarray(plan.sample_idx))
@@ -92,24 +98,21 @@ class Executor:
         return np.asarray(next_tokens)
 
     # -- the jitted data plane -------------------------------------------
-    def _unified_step(self, k_pages: List[jnp.ndarray],
+    def _unified_step(self, p_bucket: int, k_pages: List[jnp.ndarray],
                       v_pages: List[jnp.ndarray],
                       tokens: jnp.ndarray, seg_ids: jnp.ndarray,
                       positions: jnp.ndarray, write_idx: jnp.ndarray,
                       tables: jnp.ndarray, sample_idx: jnp.ndarray
                       ) -> Tuple[jnp.ndarray, List[jnp.ndarray],
                                  List[jnp.ndarray]]:
-        """tokens/seg_ids/positions/write_idx: (T,); tables: (S, P) block
-        tables; sample_idx: (S,).  Returns ((S,) argmax tokens, new K/V
-        page arrays)."""
+        """tokens/seg_ids/positions/write_idx: (T,); tables: (S, W>=P)
+        full-width block-table mirror, narrowed here to the static
+        ``p_bucket``; sample_idx: (S,).  Returns ((S,) argmax tokens,
+        new K/V page arrays)."""
         cfg = self.cfg
         t = tokens.shape[0]
         n_pages, ps = k_pages[0].shape[0], k_pages[0].shape[1]
-        s_slots, p_pages = tables.shape
-        # (S, P*ps) flat gather index into the page-major KV views
-        gidx = (tables[:, :, None] * ps
-                + jnp.arange(ps)[None, None, :]).reshape(s_slots,
-                                                         p_pages * ps)
+        tables = tables[:, :p_bucket]
         scale = cfg.query_scale or cfg.hd ** -0.5
 
         x = jnp.take(self.params["embed"], tokens, axis=0)     # (T, D)
@@ -137,14 +140,15 @@ class Executor:
             vf = v_pages[li].reshape(n_pages * ps, cfg.n_kv_heads, cfg.hd)
             kf = kf.at[write_idx].set(k.astype(kf.dtype), mode="drop")
             vf = vf.at[write_idx].set(v.astype(vf.dtype), mode="drop")
-            new_k.append(kf.reshape(n_pages, ps, cfg.n_kv_heads, cfg.hd))
-            new_v.append(vf.reshape(n_pages, ps, cfg.n_kv_heads, cfg.hd))
+            kp = kf.reshape(n_pages, ps, cfg.n_kv_heads, cfg.hd)
+            vp = vf.reshape(n_pages, ps, cfg.n_kv_heads, cfg.hd)
+            new_k.append(kp)
+            new_v.append(vp)
 
-            # per-slot contiguous cache (includes this step's writes)
-            kc = jnp.take(kf, gidx, axis=0).transpose(0, 2, 1, 3)
-            vc = jnp.take(vf, gidx, axis=0).transpose(0, 2, 1, 3)
-            o = mixed_attention(q.astype(kc.dtype), kc, vc, seg_ids,
-                                positions, scale=scale,
+            # attend the page pool in place through the block table
+            # (includes this step's writes; no per-slot gather)
+            o = paged_attention(q.astype(kp.dtype), kp, vp, tables,
+                                seg_ids, positions, scale=scale,
                                 backend=cfg.attn_backend)
             x = x + o.reshape(t, -1).astype(x.dtype) @ lp["attn"]["wo"]
             if "mlp" in lp:

@@ -18,8 +18,9 @@ design transplanted:
 
 Physical layout: one (num_pages, page_size, n_kv_heads, head_dim) array
 pair per attention layer; block tables are host-side Python (control
-plane) while writes/gathers are batched jnp scatters (data plane) — the
-paper's control/data-flow separation (§5.2).
+plane) mirrored to device by row-level deltas, writes are batched jnp
+scatters, and attention reads the pages in place through the mirror
+(data plane) — the paper's control/data-flow separation (§5.2).
 
 Scheduler/executor contract (PR 3):
 
@@ -30,12 +31,16 @@ Scheduler/executor contract (PR 3):
     the page arrays, donates them to the jitted ``unified_step``, and
     puts the results back.  While taken, the host MUST NOT alias them
     (``self.k``/``self.v`` are None so any stray access raises),
-  * ``device_tables`` maintains a device-resident block-table mirror,
-    version-invalidated so an unchanged table costs no host→device copy.
+  * ``device_tables`` maintains a device-RESIDENT block-table mirror
+    updated by row-level DELTAS: per-sequence table versions feed a
+    dirty set, and each step flushes only the changed rows as ONE
+    scatter (``table_upload_rows`` counts them — the regression gate
+    that keeps uploads O(changed rows), not O(total pages)).
 """
 
 from __future__ import annotations
 
+import functools
 import hashlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -43,6 +48,45 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+import warnings
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows_jit(mirror: jnp.ndarray, idx: jnp.ndarray,
+                      rows: jnp.ndarray) -> jnp.ndarray:
+    return mirror.at[idx].set(rows, mode="drop")
+
+
+def _scatter_rows(mirror: jnp.ndarray, idx: jnp.ndarray,
+                  rows: jnp.ndarray) -> jnp.ndarray:
+    """One compiled delta flush: scatter ``rows`` into ``mirror`` at row
+    ``idx`` (out-of-bounds padding rows drop).  The mirror is donated so
+    the device table updates in place; padding idx to pow2 buckets keeps
+    the compile count O(log max_batch) instead of one per dirty count.
+    Donation is a TPU/GPU optimization — the CPU backend's "donated
+    buffers were not usable" warning is suppressed HERE only, not
+    process-wide."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _scatter_rows_jit(mirror, idx, rows)
+
+
+def _warm_scatter_variants(s: int, width: int) -> None:
+    """Compile every pow2-padded ``_scatter_rows`` variant for an
+    (s, width) mirror up front — a one-time server-startup cost, so no
+    delta flush ever compiles on the serving hot path."""
+    n = 1
+    while True:
+        n_pad = min(n, s)
+        _scatter_rows(jnp.zeros((s, width), jnp.int32),
+                      jnp.full((n_pad,), s, jnp.int32),
+                      jnp.zeros((n_pad, width), jnp.int32))
+        if n >= s:
+            break
+        n *= 2
 
 
 @dataclass
@@ -130,10 +174,18 @@ class PagedKVCache:
                                                   # prefix-cache hits
         # prefix cache: page-content hash chain -> (page id, generation)
         self._prefix_index: Dict[bytes, Tuple[int, int]] = {}
-        # device block-table mirror invalidation
-        self._table_version = 0
-        self._mirror_key: Optional[tuple] = None
-        self._mirror: Optional[jnp.ndarray] = None
+        # device block-table mirror: per-seq versions drive row-level
+        # delta uploads (one scatter per step over only the dirty rows)
+        self._seq_version: Dict[int, int] = {}
+        self._version_counter = 0
+        self._mirror: Optional[jnp.ndarray] = None     # (S, width) device
+        self._mirror_rows: List[Optional[Tuple[int, int]]] = []
+        self.mirror_width_hint = 0     # engine sets this to the pages
+                                       # bucket cap so the mirror never
+                                       # rebuilds for width growth
+        self.upload_rows_total = 0     # host->device rows ever uploaded
+        self.upload_full_rebuilds = 0  # slot-layout/width resets
+        self.last_upload_rows = 0      # rows flushed by the last call
 
     # -- sequence lifecycle ----------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
@@ -184,8 +236,15 @@ class PagedKVCache:
         self.lengths[seq_id] = min(reused * self.page_size,
                                    self._readable(table))
         self.reused_prefix[seq_id] = reused * self.page_size
-        self._table_version += 1
+        self._bump(seq_id)
         return True
+
+    def _bump(self, seq_id: int) -> None:
+        """Mark ``seq_id``'s block table changed since the last device
+        flush (versions are globally monotonic, so a freed-and-readmitted
+        id can never alias a stale mirror row)."""
+        self._version_counter += 1
+        self._seq_version[seq_id] = self._version_counter
 
     def _readable(self, table: List[int]) -> int:
         """Contiguous token prefix actually written across a table."""
@@ -202,7 +261,7 @@ class PagedKVCache:
             self.pool.release(p)
         del self.lengths[seq_id]
         self.reused_prefix.pop(seq_id, None)
-        self._table_version += 1
+        self._seq_version.pop(seq_id, None)
 
     def ensure_capacity(self, seq_id: int, n_tokens: int) -> bool:
         """Grow the block table so ``n_tokens`` positions have pages.
@@ -221,7 +280,7 @@ class PagedKVCache:
             table.append(page)
             grown.append(page)
         if grown:
-            self._table_version += 1
+            self._bump(seq_id)
         return True
 
     def make_writable(self, seq_id: int, start: int, end: int,
@@ -274,7 +333,7 @@ class PagedKVCache:
             self.pool.release(page)
             table[page_pos] = new_page
             self.pool.stats.cow_copies += 1
-            self._table_version += 1
+            self._bump(seq_id)
             return new_page
         return page
 
@@ -293,7 +352,7 @@ class PagedKVCache:
             if page is None:
                 return False
             table.append(page)
-            self._table_version += 1
+            self._bump(seq_id)
         page = self._writable_page(seq_id, page_pos)
         if page is None:
             return False
@@ -356,22 +415,72 @@ class PagedKVCache:
         return self.write_batch(seq_id, span, skip, n_tokens)
 
     # -- device mirror / donation ----------------------------------------
+    _EMPTY_ROW = (-1, -1)
+
     def device_tables(self, seq_ids: Sequence[int], max_pages: int
                       ) -> jnp.ndarray:
-        """(len(seq_ids), max_pages) int32 block-table mirror, padded with
-        page 0.  Re-uploaded only when a table changed or the slot/bucket
-        layout differs (version-keyed)."""
-        key = (tuple(seq_ids), max_pages, self._table_version)
-        if key == self._mirror_key and self._mirror is not None:
-            return self._mirror
-        out = np.zeros((len(seq_ids), max_pages), np.int32)
-        for i, s in enumerate(seq_ids):
-            if s < 0:
-                continue
-            t = self.tables[s][:max_pages]
-            out[i, : len(t)] = t
-        self._mirror = jnp.asarray(out)
-        self._mirror_key = key
+        """(len(seq_ids), W) int32 block-table mirror with W >= the
+        requested ``max_pages``, rows padded with page 0.  The mirror is
+        device-RESIDENT and updated by deltas: slot i is dirty when its
+        (seq id, table version) differs from what the device row holds,
+        and all dirty rows flush as ONE jitted scatter per call (dirty
+        counts are pow2-padded so the scatter compiles O(log) variants).
+        A steady decode step whose tables didn't cross a page boundary
+        uploads ZERO rows.  Full re-uploads happen only when the slot
+        count or width outgrows the mirror (once, when the engine seeds
+        ``mirror_width_hint`` with the pages bucket cap).  Callers
+        wanting exactly ``max_pages`` columns slice the result — the
+        executor does so INSIDE the jitted step, so narrowing costs no
+        host→device traffic.  ``upload_rows_total``/``last_upload_rows``
+        count transferred rows including the pow2 padding (surfaced as
+        ``engine.metrics["table_upload_rows"]``; CI gates it at
+        O(changed rows), not O(steps × slots))."""
+        s = len(seq_ids)
+        targets = [(sid, self._seq_version[sid]) if sid >= 0
+                   else self._EMPTY_ROW for sid in seq_ids]
+
+        if (self._mirror is None or self._mirror.shape[0] != s
+                or self._mirror.shape[1] < max_pages):
+            width = max(max_pages, self.mirror_width_hint,
+                        self._mirror.shape[1]
+                        if self._mirror is not None else 0)
+            out = np.zeros((s, width), np.int32)
+            for i, sid in enumerate(seq_ids):
+                if sid < 0:
+                    continue
+                t = self.tables[sid][:width]
+                out[i, : len(t)] = t
+            self._mirror = jnp.asarray(out)
+            self._mirror_rows = list(targets)
+            uploaded = s
+            self.upload_full_rebuilds += 1
+            _warm_scatter_variants(s, width)
+        else:
+            width = self._mirror.shape[1]
+            dirty = [i for i, tgt in enumerate(targets)
+                     if self._mirror_rows[i] != tgt]
+            uploaded = 0
+            if dirty:
+                # pow2-pad the dirty set; padding rows carry an OOB
+                # index and drop in the scatter
+                n_pad = 1
+                while n_pad < len(dirty):
+                    n_pad *= 2
+                n_pad = min(n_pad, s)
+                idx = np.full(n_pad, s, np.int32)
+                rows = np.zeros((n_pad, width), np.int32)
+                for j, i in enumerate(dirty):
+                    sid = seq_ids[i]
+                    if sid >= 0:
+                        t = self.tables[sid][:width]
+                        rows[j, : len(t)] = t
+                    idx[j] = i
+                    self._mirror_rows[i] = targets[i]
+                self._mirror = _scatter_rows(
+                    self._mirror, jnp.asarray(idx), jnp.asarray(rows))
+                uploaded = n_pad
+        self.last_upload_rows = uploaded
+        self.upload_rows_total += uploaded
         return self._mirror
 
     def take_kv(self) -> Tuple[List[jnp.ndarray], List[jnp.ndarray]]:
@@ -390,9 +499,9 @@ class PagedKVCache:
                pad_to: Optional[int] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Materialize contiguous (B, n_kv, L, hd) K/V for a batch of
-        sequences from their page tables (gather-based paged attention;
-        the executor's in-jit gather over ``device_tables`` is the fused
-        variant)."""
+        sequences from their page tables (host-side gather — debugging /
+        legacy-engine path; the executor attends the pages IN PLACE via
+        ``paged_attention`` over ``device_tables``)."""
         max_len = max(self.lengths[s] for s in seq_ids)
         pad_to = pad_to or max_len
         max_pages = self.pages_needed(pad_to)

@@ -20,6 +20,9 @@ def rand(key_i, shape, dtype=jnp.float32, scale=1.0):
 TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
        jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
 
+# acceptance bound for the paged-attention kernel (f32 serving shapes)
+PAGED_TOL_F32 = dict(rtol=1e-5, atol=1e-5)
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("causal", [True, False])
@@ -117,6 +120,100 @@ class TestDecodeAttention:
         exp = ref.decode_attention(q, kc, vc, jnp.array([200]))
         np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                    rtol=2e-3, atol=2e-3)
+
+
+class TestPagedAttention:
+    """Block-table-prefetching kernel vs the gather-then-attend oracle."""
+
+    def _tables(self, s, p, n_pages, key_i):
+        """Random DISTINCT physical page ids per slot (p pages each)."""
+        perm = jax.random.permutation(jax.random.fold_in(KEY, key_i),
+                                      n_pages)[: s * p]
+        return perm.reshape(s, p).astype(jnp.int32)
+
+    @pytest.mark.parametrize("window", [None, 6])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_mixed_prefill_decode_batch(self, window, dtype):
+        """A flat batch mixing a prefill chunk (slot 0), a fresh prefill
+        start (slot 1) and decode tokens (slot 2) + padding."""
+        n_pages, ps, hkv, d, hq = 24, 4, 2, 32, 4
+        kp = rand(70, (n_pages, ps, hkv, d), dtype)
+        vp = rand(71, (n_pages, ps, hkv, d), dtype)
+        q = rand(72, (7, hq, d), dtype)
+        tables = self._tables(3, 4, n_pages, 73)
+        seg = jnp.asarray([0, 0, 1, 2, 2, 2, -1], jnp.int32)
+        pos = jnp.asarray([3, 4, 0, 10, 14, 15, 0], jnp.int32)
+        out = ops.paged_attention(q, kp, vp, tables, seg, pos,
+                                  window=window)
+        exp = ref.paged_attention(q, kp, vp, tables, seg, pos,
+                                  window=window)
+        tol = PAGED_TOL_F32 if dtype == jnp.float32 else TOL[dtype]
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32), **tol)
+
+    def test_ragged_page_counts(self):
+        """Slots with very different live-page counts: table rows are
+        0-padded past each sequence's last page and masking must keep
+        the padding pages out of the softmax."""
+        n_pages, ps, hkv, d, hq = 40, 8, 2, 16, 8
+        kp = rand(74, (n_pages, ps, hkv, d))
+        vp = rand(75, (n_pages, ps, hkv, d))
+        q = rand(76, (4, hq, d))
+        tables = np.zeros((4, 4), np.int32)
+        tables[0, :1] = [5]                   # 3 tokens: 1 page
+        tables[1, :4] = [7, 9, 11, 13]        # 30 tokens: 4 pages
+        tables[2, :2] = [2, 3]                # 12 tokens: 2 pages
+        tables[3, :1] = [17]
+        seg = jnp.asarray([0, 1, 2, 3], jnp.int32)
+        pos = jnp.asarray([2, 29, 11, 0], jnp.int32)
+        tables = jnp.asarray(tables)
+        out = ops.paged_attention(q, kp, vp, tables, seg, pos)
+        exp = ref.paged_attention(q, kp, vp, tables, seg, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_shared_prefix_pages(self):
+        """Two slots whose tables reference the SAME physical prefix
+        pages (prefix-cache dedup) must each attend the shared content
+        plus their own divergent tail."""
+        n_pages, ps, hkv, d, hq = 16, 4, 2, 16, 4
+        kp = rand(77, (n_pages, ps, hkv, d))
+        vp = rand(78, (n_pages, ps, hkv, d))
+        q = rand(79, (2, hq, d))
+        tables = jnp.asarray([[3, 5, 8, 0],    # shared pages 3, 5
+                              [3, 5, 9, 0]], jnp.int32)
+        seg = jnp.asarray([0, 1], jnp.int32)
+        pos = jnp.asarray([10, 11], jnp.int32)
+        out = ops.paged_attention(q, kp, vp, tables, seg, pos)
+        exp = ref.paged_attention(q, kp, vp, tables, seg, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-5)
+        # divergent tails -> divergent outputs even at equal positions
+        q_same = jnp.stack([q[0], q[0]])
+        pos_same = jnp.asarray([11, 11], jnp.int32)
+        o = ops.paged_attention(q_same, kp, vp, tables, seg, pos_same)
+        assert not np.allclose(np.asarray(o[0]), np.asarray(o[1]))
+
+    def test_matches_gathered_mixed_attention(self):
+        """paged_attention over pages == mixed_attention over the
+        explicitly gathered per-slot cache (the path it replaced)."""
+        n_pages, ps, hkv, d, hq, s, p = 20, 4, 2, 16, 4, 3, 3
+        kp = rand(80, (n_pages, ps, hkv, d))
+        vp = rand(81, (n_pages, ps, hkv, d))
+        q = rand(82, (5, hq, d))
+        tables = self._tables(s, p, n_pages, 83)
+        seg = jnp.asarray([0, 1, 1, 2, -1], jnp.int32)
+        pos = jnp.asarray([4, 7, 8, 11, 0], jnp.int32)
+        gidx = (tables[:, :, None] * ps
+                + jnp.arange(ps)[None, None, :]).reshape(s, p * ps)
+        kc = jnp.take(kp.reshape(n_pages * ps, hkv, d), gidx,
+                      axis=0).transpose(0, 2, 1, 3)
+        vc = jnp.take(vp.reshape(n_pages * ps, hkv, d), gidx,
+                      axis=0).transpose(0, 2, 1, 3)
+        out = ops.paged_attention(q, kp, vp, tables, seg, pos)
+        exp = ops.mixed_attention(q, kc, vc, seg, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-5)
 
 
 class TestRWKV6:
