@@ -2,10 +2,16 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test gradcheck conformance bench-smoke bench lint docs
+.PHONY: test gradcheck conformance chaos bench-smoke bench lint docs
 
 test:
 	$(PY) -m pytest -x -q
+
+# fault-injection matrix: the engine must fail ONE request, never the
+# step loop (tests/test_chaos.py gates watchdog_trips == injected,
+# refcount conservation after recovery, zero_decode_steps == 0)
+chaos:
+	$(PY) -m pytest -x -q tests/test_chaos.py
 
 # the dispatch-cache gate: numeric gradients + kwarg-collision cases
 gradcheck:

@@ -2,12 +2,23 @@
 
     PYTHONPATH=src python -m repro.launch.serve [--preset tiny|small]
         [--requests 32] [--max-new 8] [--chunk 16] [--json PATH]
+        [--timeout-ms T] [--ttft-deadline-ms T] [--max-queue-depth N]
+        [--faults SPEC] [--fault-seed S]
 
 Builds a synthetic mixed-length workload (long prompts interleaved with
 short ones), serves it through the paged continuous-batching engine, and
 prints the metrics that make a throughput regression attributable:
 decode tokens/s, mean TTFT, prefill chunks, preemptions, bucket
-compiles vs the bucket budget, and the page high-water mark.
+compiles vs the bucket budget, and the page high-water mark — plus the
+fault-tolerance ledger (cancellations, timeouts, failed requests,
+watchdog trips).
+
+Failure handling is per-request, not per-process: a rejected submit
+(typed ``AdmissionRejected``) is reported and skipped, a timed-out or
+quarantined request is listed with its error, and Ctrl-C drains the
+engine and prints partial outputs instead of dying mid-decode.  Fault
+injection (``--faults "nan_logits@6;pool_exhaustion@4:pages=16"``, or
+env ``REPRO_FAULTS``) exercises those paths deterministically.
 
 The big configs under ``repro.configs`` serve through the same engine on
 real accelerators; the presets here keep the entry point runnable on a
@@ -25,6 +36,8 @@ import jax.numpy as jnp
 
 from ..models.lm import LMConfig, init_params
 from ..serving.engine import ServingEngine
+from ..serving.errors import ServingError
+from ..serving.faults import FaultInjector
 
 PRESETS = {
     "tiny": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
@@ -52,6 +65,16 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--num-pages", type=int, default=256)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--timeout-ms", type=float, default=None,
+                    help="per-request total deadline")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=None,
+                    help="per-request first-token deadline")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="bounded admission (AdmissionRejected beyond)")
+    ap.add_argument("--faults", default=None,
+                    help='fault spec, e.g. "nan_logits@6;'
+                         'executor_crash@9" (see serving.faults)')
+    ap.add_argument("--fault-seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="also dump metrics JSON to this path")
     args = ap.parse_args()
@@ -60,22 +83,55 @@ def main() -> None:
                    param_dtype=jnp.float32, remat="none",
                    attn_backend="ref")
     params = init_params(cfg, jax.random.key(0))
+    faults = FaultInjector.parse(args.faults, seed=args.fault_seed) \
+        if args.faults else None
     eng = ServingEngine(cfg, params, page_size=args.page_size,
                         num_pages=args.num_pages,
                         max_batch=args.max_batch,
-                        chunk_size=args.chunk)
+                        chunk_size=args.chunk,
+                        max_queue_depth=args.max_queue_depth,
+                        faults=faults)
 
     prompts = synthetic_workload(args.requests, cfg.vocab_size)
     t0 = time.perf_counter()
-    for p in prompts:
-        eng.submit(p, max_new_tokens=args.max_new)
-    done = eng.run()
+    rejected = 0
+    for i, p in enumerate(prompts):
+        try:
+            eng.submit(p, max_new_tokens=args.max_new,
+                       ttft_deadline_ms=args.ttft_deadline_ms,
+                       timeout_ms=args.timeout_ms)
+        except ServingError as e:
+            # typed per-request rejection — report it, keep serving
+            rejected += 1
+            print(f"[rejected] request {i}: "
+                  f"{type(e).__name__}: {e}")
+    interrupted = False
+    try:
+        done = eng.run()
+    except KeyboardInterrupt:
+        # drain: cancel everything, keep the partial outputs
+        interrupted = True
+        done = []
+        partial = eng.drain()
+        print(f"\n[interrupt] drained {len(partial)} in-flight "
+              f"request(s); partial outputs:")
+        for r in partial:
+            print(f"  req {r.req_id}: {len(r.out_tokens)} token(s) "
+                  f"{r.out_tokens}")
     wall = time.perf_counter() - t0
+
+    for r in eng.aborted:
+        if r.state.value != "cancelled":
+            print(f"[{r.state.value}] request {r.req_id}: {r.error} "
+                  f"({len(r.out_tokens)} partial token(s))")
 
     m = eng.stats()
     ttfts = [r.first_token_at - r.submitted_at for r in done]
     report = {
         "served": len(done),
+        "rejected_submits": rejected,
+        "aborted": len(eng.aborted),
+        "interrupted": interrupted,
         "wall_s": round(wall, 3),
         "decode_tokens_per_s": round(m["decoded_tokens"] / wall, 1),
         "ttft_mean_s": round(sum(ttfts) / max(len(ttfts), 1), 4),
@@ -84,7 +140,11 @@ def main() -> None:
         **{k: m[k] for k in ("steps", "prefills", "prefill_chunks",
                              "preemptions", "zero_decode_steps",
                              "decoded_tokens", "page_hwm",
-                             "table_upload_rows", "prefix_hit_rate")},
+                             "table_upload_rows", "prefix_hit_rate",
+                             "cancellations", "timeouts",
+                             "failed_requests", "watchdog_trips",
+                             "aged_admissions", "executor_failures",
+                             "steps_exhausted")},
     }
     for k, v in report.items():
         print(f"{k:>22}: {v}")

@@ -1,12 +1,24 @@
 """Serving stack: paged KV allocator (§5.3), pure-Python scheduler
 (control plane) and jitted executor (data plane) behind the
-``ServingEngine`` facade."""
+``ServingEngine`` facade — plus the request-lifecycle fault-tolerance
+layer: typed ``errors``, the invariant ``watchdog``, and the
+deterministic ``faults`` injection harness."""
 
+from . import errors
 from .engine import ServingEngine
+from .errors import (AdmissionRejected, BucketOverflow,
+                     DeadlineExceeded, FaultInjected, PoolExhausted,
+                     RequestFailed, ServingError)
 from .executor import Executor
+from .faults import FaultInjector, FaultSpec
 from .kv_cache import PagedKVCache, PagePool
 from .legacy import LegacyServingEngine
-from .scheduler import Request, Scheduler, StepPlan
+from .scheduler import Request, RequestState, Scheduler, StepPlan
+from .watchdog import Violation, Watchdog
 
 __all__ = ["ServingEngine", "LegacyServingEngine", "PagedKVCache",
-           "PagePool", "Scheduler", "Executor", "Request", "StepPlan"]
+           "PagePool", "Scheduler", "Executor", "Request", "StepPlan",
+           "RequestState", "errors", "ServingError", "AdmissionRejected",
+           "PoolExhausted", "BucketOverflow", "DeadlineExceeded",
+           "RequestFailed", "FaultInjected", "FaultInjector",
+           "FaultSpec", "Watchdog", "Violation"]

@@ -9,14 +9,26 @@ granularity, with the §5.3 caching allocator underneath
 (``kv_cache.PagedKVCache``).
 
 Loop per step:
-  1. the scheduler admits waiting requests while pages remain, then
-     plans a padded token batch: one decode token per steady-state
-     sequence FIRST (liveliness), prefill chunks (≤ ``chunk_size``
-     tokens, env ``REPRO_PREFILL_CHUNK``) filling the rest of the budget,
+  1. the scheduler expires deadlines and admits waiting requests while
+     pages remain, then plans a padded token batch: one decode token
+     per steady-state sequence FIRST (liveliness), prefill chunks
+     (≤ ``chunk_size`` tokens, env ``REPRO_PREFILL_CHUNK``) filling the
+     rest of the budget,
   2. the executor scatters the batch's K/V into pages, attends, and
-     samples — one device program, donated KV page arrays,
+     samples — one device program, donated KV page arrays — and flags
+     any slot whose logits went non-finite,
   3. the scheduler commits: cursors advance, finished sequences release
      pages refcount-immediately (§5.5) for the very next admission.
+
+Fault tolerance wraps the loop (the robustness half of "serve heavy
+traffic from millions of users"): a flagged or crashed or corrupted
+sequence is QUARANTINED — state FAILED, pages reclaimed+scrubbed via
+``kv.recover()``, device tables force-rebuilt — and the engine keeps
+serving everyone else.  The invariant watchdog (``watchdog.Watchdog``)
+audits refcount conservation, table coherence, and per-sequence
+progress every ``watchdog_interval`` steps; the deterministic fault
+harness (``faults.FaultInjector``, env ``REPRO_FAULTS``) exists to
+prove all of this under ``make chaos``.
 
 The pre-refactor monolith survives as ``legacy.LegacyServingEngine``
 (the benchmark baseline); the dense-cache ``launch.make_serve_step``
@@ -25,16 +37,20 @@ path remains the pod-scale pjit twin.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 
 from ..models import lm as LM
+from .errors import DeadlineExceeded, RequestFailed
 from .executor import Executor
+from .faults import FaultInjector
 from .kv_cache import PagedKVCache
-from .scheduler import Request, Scheduler
+from .scheduler import Request, RequestState, Scheduler
+from .watchdog import Watchdog
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "Request", "RequestState"]
 
 
 class ServingEngine:
@@ -47,7 +63,16 @@ class ServingEngine:
                  greedy: bool = True,
                  chunk_size: Optional[int] = None,
                  token_budget: Optional[int] = None,
-                 max_pages_per_seq: Optional[int] = None):
+                 max_pages_per_seq: Optional[int] = None,
+                 max_queue_depth: Optional[int] = None,
+                 admit_hwm_frac: float = 1.0,
+                 aging_steps: int = 32,
+                 watchdog_interval: int = 8,
+                 stall_steps: int = 64,
+                 max_idle_steps: int = 64,
+                 exec_failure_limit: int = 3,
+                 faults: Optional[FaultInjector] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         for spec in cfg.pattern:
             if spec.mixer not in ("attn",):
                 raise ValueError(
@@ -65,27 +90,149 @@ class ServingEngine:
         self.scheduler = Scheduler(
             self.kv, max_batch=max_batch, chunk_size=chunk_size,
             token_budget=token_budget,
-            max_pages_per_seq=max_pages_per_seq)
+            max_pages_per_seq=max_pages_per_seq,
+            max_queue_depth=max_queue_depth,
+            admit_hwm_frac=admit_hwm_frac, aging_steps=aging_steps,
+            clock=clock)
         # size the device table mirror at the pages bucket cap up front:
         # the delta path then never pays a width-growth rebuild
         self.kv.mirror_width_hint = self.scheduler.p_buckets()[-1]
         self.executor = Executor(cfg, params)
+        self.watchdog = Watchdog(interval=watchdog_interval,
+                                 stall_steps=stall_steps)
+        # fault injection: ctor arg, else env (None = zero overhead)
+        self.faults = faults if faults is not None \
+            else FaultInjector.from_env()
+        self.max_idle_steps = max_idle_steps
+        self.exec_failure_limit = exec_failure_limit
+        self._step_no = 0
+        self._exec_fail_streak = 0
+        self._counters = {"watchdog_trips": 0, "executor_failures": 0,
+                          "steps_exhausted": 0}
 
     # -- public API ---------------------------------------------------------
-    def submit(self, prompt: Sequence[int],
-               max_new_tokens: int = 16) -> int:
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               *, ttft_deadline_ms: Optional[float] = None,
+               timeout_ms: Optional[float] = None) -> int:
         """Queue a request; returns its request id.  Admission happens
-        lazily at the next step, when pages are available."""
-        return self.scheduler.submit(prompt, max_new_tokens)
+        lazily at the next step, when pages are available.  Raises
+        :class:`~.errors.AdmissionRejected` (over-cap prompt, queue at
+        ``max_queue_depth``, or page-watermark backpressure) — the
+        typed signal for a front door to shed load.  ``ttft_deadline_ms``
+        / ``timeout_ms`` arm per-request deadlines checked every step."""
+        return self.scheduler.submit(
+            prompt, max_new_tokens, ttft_deadline_ms=ttft_deadline_ms,
+            timeout_ms=timeout_ms)
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a request at any point in its lifecycle — queued,
+        mid-prefill, or mid-decode.  Its pages are released refcount-
+        safely (COW/prefix sharers keep theirs).  Returns False for an
+        unknown or already-terminal id."""
+        return self.scheduler.cancel(req_id)
+
+    def result(self, req_id: int) -> Optional[Request]:
+        """Terminal-state accessor: the finished/cancelled ``Request``
+        (with any partial ``out_tokens``), ``None`` while still in
+        flight, or a typed raise — :class:`~.errors.DeadlineExceeded`
+        for TIMED_OUT, :class:`~.errors.RequestFailed` for FAILED."""
+        req = self.scheduler.done.get(req_id)
+        if req is None:
+            return None
+        if req.state is RequestState.TIMED_OUT:
+            raise DeadlineExceeded(f"request {req_id}: {req.error}")
+        if req.state is RequestState.FAILED:
+            raise RequestFailed(f"request {req_id}: {req.error}",
+                                req_id=req_id)
+        return req
+
+    def drain(self) -> List[Request]:
+        """Cancel every queued and running request (pages freed),
+        returning them with whatever partial ``out_tokens`` they had —
+        the CLI's Ctrl-C path."""
+        reqs = list(self.scheduler.running.values()) \
+            + list(self.scheduler.waiting)
+        for req in reqs:
+            self.scheduler.cancel(req.req_id)
+        return reqs
+
+    # -- the fault-tolerant step loop ---------------------------------------
+    def _quarantine(self, req_id: int, reason: str) -> None:
+        """FAIL one request and repair shared state around it: pages
+        reclaimed + scrubbed via pool reconciliation, device block
+        tables force-rebuilt.  The step loop never stops."""
+        self.scheduler.fail(req_id, reason)
+        self._counters["watchdog_trips"] += 1
+        self.kv.recover()
+
+    def _run_watchdog(self) -> None:
+        violations = self.watchdog.check(self.scheduler, self.kv)
+        if not violations:
+            return
+        for v in violations:
+            self._counters["watchdog_trips"] += 1
+            if v.seq_id is not None:
+                self.scheduler.fail(v.seq_id, f"watchdog[{v.kind}]: "
+                                    f"{v.detail}")
+        self.kv.recover()
 
     def _step(self) -> Optional[List[Request]]:
         """One unified continuous-batching step (admission + plan +
-        execute + commit).  None = nothing runnable."""
+        execute + commit), with the executor boundary treated as a
+        fault line.  None = nothing runnable."""
+        self._step_no += 1
+        if self.faults is not None:
+            self.faults.before_plan(self._step_no, self.scheduler,
+                                    self.kv)
         plan = self.scheduler.plan()
         if plan is None:
             return None
-        next_tokens = self.executor.execute(plan, self.kv)
-        return self.scheduler.commit(plan, next_tokens)
+        try:
+            if self.faults is not None:
+                self.faults.before_execute(self._step_no, plan,
+                                           self.scheduler, self.kv)
+            next_tokens, bad = self.executor.execute(plan, self.kv)
+        except RequestFailed as e:
+            # attributed executor fault: fail the culprit, keep serving
+            self._counters["executor_failures"] += 1
+            if e.req_id is not None and \
+                    self.scheduler._lookup(e.req_id) is not None:
+                self._quarantine(e.req_id, f"executor fault: {e}")
+            else:
+                self._unattributed_failure(plan, e)
+            return []
+        except Exception as e:          # noqa: BLE001 — fault line
+            self._counters["executor_failures"] += 1
+            self._unattributed_failure(plan, e)
+            return []
+        self._exec_fail_streak = 0
+        if bad.any():
+            # finite-logits barrier: quarantine flagged slots BEFORE
+            # commit so a poisoned token never enters a history
+            for s in plan.spans:
+                if s.sample and s.req.slot >= 0 and bad[s.req.slot]:
+                    self._quarantine(s.req.req_id,
+                                     "non-finite logits (executor "
+                                     "fault barrier)")
+        done = self.scheduler.commit(plan, next_tokens)
+        if self.watchdog.due(self._step_no):
+            self._run_watchdog()
+        return done
+
+    def _unattributed_failure(self, plan, exc: Exception) -> None:
+        """Executor exception with no culprit id: retry the step (the
+        plan rebuilds from unchanged cursors); after
+        ``exec_failure_limit`` consecutive failures quarantine the
+        whole planned batch — bounded blast radius, never a wedge."""
+        self._exec_fail_streak += 1
+        if self._exec_fail_streak < self.exec_failure_limit:
+            return
+        for rid in sorted({s.req.req_id for s in plan.spans}):
+            if self.scheduler._lookup(rid) is not None:
+                self._quarantine(
+                    rid, f"executor failed x{self._exec_fail_streak}: "
+                         f"{exc!r}")
+        self._exec_fail_streak = 0
 
     def step(self) -> List[Request]:
         """Run one continuous-batching step; returns the requests that
@@ -93,20 +240,33 @@ class ServingEngine:
         return self._step() or []
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Step until every submitted request finishes (or nothing is
-        runnable / ``max_steps`` elapse); returns finished requests in
-        completion order."""
+        """Step until every submitted request reaches a terminal state
+        (or ``max_steps`` elapse); returns FINISHED requests in
+        completion order.  Cancelled/timed-out/failed requests are in
+        :attr:`aborted` (and via :meth:`result`).  Hitting the step cap
+        retires everything still live as TIMED_OUT and bumps
+        ``metrics["steps_exhausted"]`` — never a silent partial return.
+        An idle engine (every waiting request blocked on pages) spins at
+        most ``max_idle_steps`` before giving up."""
         finished: List[Request] = []
+        idle = 0
         for _ in range(max_steps):
             if not self.scheduler.waiting and not self.scheduler.running:
-                break
+                return finished
             done = self._step()
             if done is None:
-                # nothing runnable: every waiting request is blocked on
-                # pages even with the pool otherwise idle — bail like the
-                # legacy engine rather than spin
-                break
-            finished.extend(done)
+                # nothing runnable: spin briefly (deadlines may expire,
+                # fault holds may release), then bail rather than hang
+                idle += 1
+                if idle > self.max_idle_steps:
+                    return finished
+            else:
+                idle = 0
+                finished.extend(done)
+        if self.scheduler.waiting or self.scheduler.running:
+            self._counters["steps_exhausted"] += 1
+            self.scheduler.timeout_all(
+                f"engine step cap max_steps={max_steps} exhausted")
         return finished
 
     # -- introspection ------------------------------------------------------
@@ -119,14 +279,24 @@ class ServingEngine:
         return self.scheduler.running
 
     @property
+    def aborted(self) -> List[Request]:
+        """Requests retired CANCELLED / TIMED_OUT / FAILED (each holds
+        its partial ``out_tokens`` and an ``error`` string)."""
+        return self.scheduler.aborted
+
+    @property
     def metrics(self) -> Dict[str, Any]:
         """Counter snapshot: scheduler counters (``steps``,
-        ``prefill_chunks``, ``preemptions``, ``zero_decode_steps``, ...)
-        plus ``bucket_compiles`` (jitted ``unified_step`` variants — must
-        stay ≤ :attr:`bucket_count`), ``page_hwm`` (live-page high-water
-        mark) and ``table_upload_rows`` (host→device block-table rows
-        flushed by the delta mirror — O(changed rows), the CI bound)."""
+        ``prefill_chunks``, ``preemptions``, ``zero_decode_steps``,
+        ``cancellations``, ``timeouts``, ``failed_requests``,
+        ``aged_admissions``, ...) plus ``bucket_compiles`` (jitted
+        ``unified_step`` variants — must stay ≤ :attr:`bucket_count`),
+        ``page_hwm`` (live-page high-water mark), ``table_upload_rows``
+        (host→device block-table rows flushed by the delta mirror),
+        and the fault-tolerance counters ``watchdog_trips``,
+        ``executor_failures``, ``steps_exhausted``."""
         m = dict(self.scheduler.metrics)
+        m.update(self._counters)
         m["bucket_compiles"] = self.executor.compile_count
         m["page_hwm"] = self.kv.pool.stats.page_hwm
         m["table_upload_rows"] = self.kv.upload_rows_total

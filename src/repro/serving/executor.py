@@ -81,12 +81,16 @@ class Executor:
         return len(self._compiled)
 
     # -- host entry -------------------------------------------------------
-    def execute(self, plan: StepPlan, kv: PagedKVCache) -> np.ndarray:
-        """Run one unified step; returns (max_batch,) sampled tokens."""
+    def execute(self, plan: StepPlan, kv: PagedKVCache
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """Run one unified step; returns ((max_batch,) sampled tokens,
+        (max_batch,) bool non-finite-logits flags — the fault barrier
+        the engine uses to quarantine a poisoned sequence without
+        losing the step for everyone else)."""
         tables = kv.device_tables(plan.slot_seqs, plan.p_bucket)
         ks, vs = kv.take_kv()
         try:
-            next_tokens, ks, vs = self._step(
+            next_tokens, bad, ks, vs = self._step(
                 plan.p_bucket, ks, vs,
                 jnp.asarray(plan.tokens), jnp.asarray(plan.seg_ids),
                 jnp.asarray(plan.positions), jnp.asarray(plan.write_idx),
@@ -95,7 +99,7 @@ class Executor:
             if ks is not None:
                 kv.put_kv(ks, vs)
         self._compiled.add((plan.t_bucket, plan.p_bucket))
-        return np.asarray(next_tokens)
+        return np.asarray(next_tokens), np.asarray(bad)
 
     # -- the jitted data plane -------------------------------------------
     def _unified_step(self, p_bucket: int, k_pages: List[jnp.ndarray],
@@ -103,12 +107,12 @@ class Executor:
                       tokens: jnp.ndarray, seg_ids: jnp.ndarray,
                       positions: jnp.ndarray, write_idx: jnp.ndarray,
                       tables: jnp.ndarray, sample_idx: jnp.ndarray
-                      ) -> Tuple[jnp.ndarray, List[jnp.ndarray],
-                                 List[jnp.ndarray]]:
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                 List[jnp.ndarray], List[jnp.ndarray]]:
         """tokens/seg_ids/positions/write_idx: (T,); tables: (S, W>=P)
         full-width block-table mirror, narrowed here to the static
         ``p_bucket``; sample_idx: (S,).  Returns ((S,) argmax tokens,
-        new K/V page arrays)."""
+        (S,) non-finite-logits flags, new K/V page arrays)."""
         cfg = self.cfg
         t = tokens.shape[0]
         n_pages, ps = k_pages[0].shape[0], k_pages[0].shape[1]
@@ -165,4 +169,8 @@ class Executor:
         xs = jnp.take(x, sample_idx, axis=0)                   # (S, D)
         logits = xs @ (self.params["embed"].T if cfg.tie_embeddings
                        else self.params["lm_head"])
-        return jnp.argmax(logits, axis=-1), new_k, new_v
+        # per-slot fault barrier: a NaN/inf logits row (poisoned KV,
+        # overflowed activations) flags JUST that slot — the engine
+        # quarantines the one request instead of crashing the step loop
+        bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+        return jnp.argmax(logits, axis=-1), bad, new_k, new_v

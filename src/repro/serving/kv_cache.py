@@ -186,6 +186,10 @@ class PagedKVCache:
         self.upload_rows_total = 0     # host->device rows ever uploaded
         self.upload_full_rebuilds = 0  # slot-layout/width resets
         self.last_upload_rows = 0      # rows flushed by the last call
+        # pages legitimately held OUTSIDE any block table (e.g. the
+        # fault injector's pool-exhaustion holds) — the watchdog and
+        # ``reconcile`` count these as referenced
+        self.external_refs: Dict[int, int] = {}
 
     # -- sequence lifecycle ----------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
@@ -262,6 +266,71 @@ class PagedKVCache:
         del self.lengths[seq_id]
         self.reused_prefix.pop(seq_id, None)
         self._seq_version.pop(seq_id, None)
+
+    # -- quarantine / recovery --------------------------------------------
+    def quarantine_seq(self, seq_id: int) -> None:
+        """Drop a SUSPECT sequence's bookkeeping WITHOUT walking its
+        (possibly corrupted) block table through the normal release
+        path — a corrupt entry must never reach ``pool.release``.  The
+        pages it held become orphans that the next :meth:`recover` call
+        reclaims, scrubs, and returns to the free list."""
+        self.tables.pop(seq_id, None)
+        self.lengths.pop(seq_id, None)
+        self.reused_prefix.pop(seq_id, None)
+        self._seq_version.pop(seq_id, None)
+
+    def recover(self) -> int:
+        """Force-rebuild allocator + mirror state from the surviving
+        block tables — the watchdog's repair path after a quarantine or
+        an unattributable invariant violation.
+
+        Reconciles ``pool.refs`` against the reference counts implied
+        by the live tables (plus ``external_refs``), rebuilds the free
+        list, scrubs reclaimed pages to zero (so poisoned K/V — e.g.
+        injected NaNs — can never leak into a future sequence), realigns
+        the alloc/free counters so ``allocated == freed + held`` holds
+        again, and drops the device table mirror so the next
+        ``device_tables`` call does a full rebuild.  Returns the number
+        of repaired pages."""
+        pool = self.pool
+        expected: Dict[int, int] = dict(self.external_refs)
+        for table in self.tables.values():
+            for p in table:
+                if 0 <= p < pool.num_pages:
+                    expected[p] = expected.get(p, 0) + 1
+        repaired, orphans = 0, []
+        for page in range(pool.num_pages):
+            want = expected.get(page, 0)
+            have = pool.refs.get(page, 0)
+            if want == have:
+                continue
+            repaired += 1
+            if want == 0:
+                orphans.append(page)
+                del pool.refs[page]
+                pool.filled.pop(page, None)
+            else:
+                pool.refs[page] = want
+        pool.free = [p for p in range(pool.num_pages - 1, -1, -1)
+                     if p not in pool.refs]
+        # realign conservation: allocated == freed + held, by definition
+        pool.stats.freed_pages = (pool.stats.allocated_pages
+                                  - len(pool.refs))
+        if orphans:
+            self.scrub_pages(orphans)
+        self._mirror = None            # next device_tables: full rebuild
+        return repaired
+
+    def scrub_pages(self, pages: Sequence[int]) -> None:
+        """Zero the K/V content of ``pages`` (quarantine hygiene: a
+        reclaimed page must not carry NaN/garbage into its next
+        sequence).  Requires the host to own the arrays (not taken)."""
+        if not pages or self.k is None:
+            return
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        for layer in range(self.n_layers):
+            self.k[layer] = self.k[layer].at[idx].set(0)
+            self.v[layer] = self.v[layer].at[idx].set(0)
 
     def ensure_capacity(self, seq_id: int, n_tokens: int) -> bool:
         """Grow the block table so ``n_tokens`` positions have pages.

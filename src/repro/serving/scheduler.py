@@ -38,11 +38,32 @@ from __future__ import annotations
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from enum import Enum
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .errors import (AdmissionRejected, BucketOverflow, PoolExhausted)
 from .kv_cache import PagedKVCache
+
+
+class RequestState(Enum):
+    """Explicit per-request lifecycle:
+    QUEUED → PREFILL → DECODE → {FINISHED, CANCELLED, TIMED_OUT,
+    FAILED} (preemption loops PREFILL/DECODE back to QUEUED).  The
+    last four are terminal; terminal requests live in
+    ``Scheduler.done`` with pages released."""
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    TIMED_OUT = "timed_out"
+    FAILED = "failed"
+
+
+TERMINAL = (RequestState.FINISHED, RequestState.CANCELLED,
+            RequestState.TIMED_OUT, RequestState.FAILED)
 
 
 @dataclass
@@ -60,6 +81,13 @@ class Request:
     created_len: int = 0         # history length at (re-)admission:
                                  # writes below it are hash-pledged
                                  # prompt content, at/above it divergent
+    # lifecycle / fault tolerance
+    state: RequestState = RequestState.QUEUED
+    ttft_deadline_ms: Optional[float] = None   # first token due by
+    timeout_ms: Optional[float] = None         # whole request due by
+    error: Optional[str] = None  # why a terminal state was reached
+    last_advance_step: int = 0   # scheduler step of last cursor move
+    age_steps: int = 0           # steps spent QUEUED (aging guard)
 
     @property
     def done(self) -> bool:
@@ -106,7 +134,7 @@ def pow2_bucket(n: int, lo: int, hi: int) -> int:
     while b < n:
         b *= 2
     if b > hi:
-        raise ValueError(f"{n} exceeds bucket cap {hi}")
+        raise BucketOverflow(f"{n} exceeds bucket cap {hi}")
     return b
 
 
@@ -117,7 +145,11 @@ class Scheduler:
                  chunk_size: Optional[int] = None,
                  token_budget: Optional[int] = None,
                  max_pages_per_seq: Optional[int] = None,
-                 min_t_bucket: int = 8, min_p_bucket: int = 4):
+                 min_t_bucket: int = 8, min_p_bucket: int = 4,
+                 max_queue_depth: Optional[int] = None,
+                 admit_hwm_frac: float = 1.0,
+                 aging_steps: int = 32,
+                 clock: Callable[[], float] = time.perf_counter):
         self.kv = kv
         self.max_batch = max_batch
         self.chunk_size = chunk_size or int(
@@ -129,14 +161,25 @@ class Scheduler:
         self.min_p_bucket = min(min_p_bucket,
                                 pow2_bucket(self.max_pages_per_seq, 1,
                                             1 << 30))
+        # admission gates: bounded queue + page-watermark backpressure
+        # (defaults leave both OFF so batch callers keep FIFO-forever)
+        self.max_queue_depth = max_queue_depth
+        self.admit_hwm_frac = admit_hwm_frac
+        self.aging_steps = aging_steps   # waiting steps before a blocked
+                                         # request stops being bypassed
+        self.clock = clock               # injectable for deadline tests
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}
+        self.done: Dict[int, Request] = {}    # terminal requests
+        self.aborted: List[Request] = []      # CANCELLED/TIMED_OUT/FAILED
         self.slots: List[int] = [-1] * max_batch      # slot -> seq id
         self._next_id = 0
         self.metrics = {
             "steps": 0, "prefills": 0, "decoded_tokens": 0,
             "rejected_admissions": 0, "prefill_chunks": 0,
             "preemptions": 0, "zero_decode_steps": 0,
+            "cancellations": 0, "timeouts": 0, "failed_requests": 0,
+            "aged_admissions": 0, "rejected_submits": 0,
         }
 
     # -- bucket contract --------------------------------------------------
@@ -161,15 +204,32 @@ class Scheduler:
         return len(self.t_buckets()) * len(self.p_buckets())
 
     # -- admission --------------------------------------------------------
-    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16
-               ) -> int:
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               *, ttft_deadline_ms: Optional[float] = None,
+               timeout_ms: Optional[float] = None) -> int:
         total = len(prompt) + max_new_tokens
         if self.kv.pages_needed(total) > self.max_pages_per_seq:
-            raise ValueError(
+            self.metrics["rejected_submits"] += 1
+            raise AdmissionRejected(
                 f"request needs {self.kv.pages_needed(total)} pages, "
                 f"max_pages_per_seq={self.max_pages_per_seq}")
+        if self.max_queue_depth is not None and \
+                len(self.waiting) >= self.max_queue_depth:
+            self.metrics["rejected_submits"] += 1
+            raise AdmissionRejected(
+                f"queue depth {len(self.waiting)} at "
+                f"max_queue_depth={self.max_queue_depth}")
+        if self.admit_hwm_frac < 1.0:
+            live = self.kv.pool.num_pages - self.kv.pool.num_free
+            if live >= self.admit_hwm_frac * self.kv.pool.num_pages:
+                self.metrics["rejected_submits"] += 1
+                raise PoolExhausted(
+                    f"{live}/{self.kv.pool.num_pages} pages live >= "
+                    f"admit_hwm_frac={self.admit_hwm_frac} watermark")
         req = Request(self._next_id, list(prompt), max_new_tokens,
-                      submitted_at=time.perf_counter())
+                      submitted_at=self.clock(),
+                      ttft_deadline_ms=ttft_deadline_ms,
+                      timeout_ms=timeout_ms)
         self._next_id += 1
         self.waiting.append(req)
         return req.req_id
@@ -181,16 +241,24 @@ class Scheduler:
         return -1
 
     def _admit(self) -> None:
-        while self.waiting and len(self.running) < self.max_batch:
-            req = self.waiting[0]
+        # best-effort FIFO: a blocked request is BYPASSED by younger
+        # ones that do fit — until it has waited ``aging_steps`` plans,
+        # after which it holds the line (starvation-free aging; the
+        # admission that finally lands counts in ``aged_admissions``)
+        i = 0
+        while i < len(self.waiting) and len(self.running) < self.max_batch:
+            req = self.waiting[i]
             hist = req.history
-            if not self.kv.can_admit(len(hist) + 1):
+            if not (self.kv.can_admit(len(hist) + 1)
+                    and self.kv.create(req.req_id, hist)):
                 self.metrics["rejected_admissions"] += 1
-                break
-            if not self.kv.create(req.req_id, hist):
-                self.metrics["rejected_admissions"] += 1
-                break
-            self.waiting.pop(0)
+                if req.age_steps >= self.aging_steps:
+                    break                # aged: nobody bypasses it
+                i += 1
+                continue
+            self.waiting.pop(i)
+            if req.age_steps >= self.aging_steps:
+                self.metrics["aged_admissions"] += 1
             # prefix reuse skips compute too — capped by what sharers
             # have actually written (kv.lengths) — but the LAST history
             # token is always recomputed: its logits seed the next
@@ -202,6 +270,9 @@ class Scheduler:
             req.slot = self._free_slot()
             self.slots[req.slot] = req.req_id
             self.running[req.req_id] = req
+            req.state = (RequestState.DECODE if req.in_decode
+                         else RequestState.PREFILL)
+            req.last_advance_step = self.metrics["steps"]
             self.metrics["prefills"] += 1
 
     def _preempt(self, req: Request) -> None:
@@ -211,14 +282,102 @@ class Scheduler:
         self.slots[req.slot] = -1
         req.slot = -1
         req.computed = 0
+        req.state = RequestState.QUEUED
         del self.running[req.req_id]
         self.waiting.insert(0, req)
         self.metrics["preemptions"] += 1
 
+    # -- request lifecycle -------------------------------------------------
+    def _lookup(self, req_id: int) -> Optional[Request]:
+        req = self.running.get(req_id)
+        if req is None:
+            req = next((r for r in self.waiting if r.req_id == req_id),
+                       None)
+        return req
+
+    def _retire(self, req: Request, state: RequestState, reason: str,
+                quarantine: bool = False) -> None:
+        """Move a request to a terminal state, releasing its resources.
+        ``quarantine=True`` routes page release through the suspect-
+        state path (``kv.quarantine_seq`` — never walks a possibly
+        corrupt table through ``pool.release``); the engine follows up
+        with ``kv.recover()``."""
+        if req.req_id in self.running:
+            if quarantine:
+                self.kv.quarantine_seq(req.req_id)
+            else:
+                self.kv.free_seq(req.req_id)
+            if req.slot >= 0:
+                self.slots[req.slot] = -1
+                req.slot = -1
+            del self.running[req.req_id]
+        elif req in self.waiting:
+            self.waiting.remove(req)
+        req.state = state
+        req.error = reason
+        req.finished_at = self.clock()
+        self.done[req.req_id] = req
+        self.aborted.append(req)
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a request at ANY lifecycle point — queued, mid-prefill
+        or mid-decode.  Pages release refcount-safely (shared/COW pages
+        just drop one reference; sharers keep theirs).  Returns False
+        when the id is unknown or already terminal."""
+        req = self._lookup(req_id)
+        if req is None:
+            return False
+        self._retire(req, RequestState.CANCELLED, "cancelled by caller")
+        self.metrics["cancellations"] += 1
+        return True
+
+    def fail(self, req_id: int, reason: str) -> bool:
+        """Quarantine a request (state FAILED): its bookkeeping is
+        dropped WITHOUT trusting its block table; the caller must run
+        ``kv.recover()`` afterwards to reclaim + scrub the orphaned
+        pages and force a device-table rebuild."""
+        req = self._lookup(req_id)
+        if req is None:
+            return False
+        self._retire(req, RequestState.FAILED, reason, quarantine=True)
+        self.metrics["failed_requests"] += 1
+        return True
+
+    def timeout_all(self, reason: str) -> int:
+        """Retire EVERY queued/running request as TIMED_OUT (pages
+        freed) — the engine's step-cap drain.  Returns the count."""
+        n = 0
+        for req in list(self.running.values()) + list(self.waiting):
+            self._retire(req, RequestState.TIMED_OUT, reason)
+            self.metrics["timeouts"] += 1
+            n += 1
+        return n
+
+    def _expire_deadlines(self) -> None:
+        """Retire requests whose TTFT or total deadline has passed
+        (checked every ``plan``; uses the injectable ``clock``)."""
+        now = self.clock()
+        for req in list(self.waiting) + list(self.running.values()):
+            late: Optional[str] = None
+            if req.timeout_ms is not None and \
+                    now > req.submitted_at + req.timeout_ms / 1e3:
+                late = f"timeout_ms={req.timeout_ms} exceeded"
+            elif req.ttft_deadline_ms is not None and \
+                    req.first_token_at is None and \
+                    now > req.submitted_at + req.ttft_deadline_ms / 1e3:
+                late = f"ttft_deadline_ms={req.ttft_deadline_ms} missed"
+            if late is not None:
+                self._retire(req, RequestState.TIMED_OUT, late)
+                self.metrics["timeouts"] += 1
+
     # -- step planning ----------------------------------------------------
     def plan(self) -> Optional[StepPlan]:
-        """Admit, pick spans under the token budget, maintain pages/COW,
-        and emit bucket-padded operands.  None = nothing runnable."""
+        """Expire deadlines, admit, pick spans under the token budget,
+        maintain pages/COW, and emit bucket-padded operands.  None =
+        nothing runnable."""
+        self._expire_deadlines()
+        for r in self.waiting:
+            r.age_steps += 1
         self._admit()
         if not self.running:
             return None
@@ -322,24 +481,33 @@ class Scheduler:
         sampled tokens, retire finished requests (pages released for the
         very next admission)."""
         finished: List[Request] = []
+        self.metrics["steps"] += 1
         for s in plan.spans:
             req = s.req
+            if self.running.get(req.req_id) is not req:
+                continue             # retired mid-step (cancel/fail)
             req.computed = s.end
+            req.last_advance_step = self.metrics["steps"]
             self.kv.advance(req.req_id, s.end)
-            if not s.sample:
-                continue
-            tok = int(next_tokens[req.slot])
-            req.out_tokens.append(tok)
-            if req.first_token_at is None:
-                req.first_token_at = time.perf_counter()
-            if s.decode:
-                self.metrics["decoded_tokens"] += 1
-            if req.done:
-                req.finished_at = time.perf_counter()
-                self.kv.free_seq(req.req_id)
-                self.slots[req.slot] = -1
-                req.slot = -1
-                del self.running[req.req_id]
-                finished.append(req)
-        self.metrics["steps"] += 1
+            if s.sample:
+                tok = int(next_tokens[req.slot])
+                req.out_tokens.append(tok)
+                if req.first_token_at is None:
+                    req.first_token_at = self.clock()
+                if s.decode:
+                    self.metrics["decoded_tokens"] += 1
+                if req.done:
+                    req.state = RequestState.FINISHED
+                    req.finished_at = self.clock()
+                    self.kv.free_seq(req.req_id)
+                    self.slots[req.slot] = -1
+                    req.slot = -1
+                    del self.running[req.req_id]
+                    self.done[req.req_id] = req
+                    finished.append(req)
+                    continue
+            # state AFTER any append: a request that just sampled its
+            # first token is now in steady-state decode, not prefill
+            req.state = (RequestState.DECODE if req.in_decode
+                         else RequestState.PREFILL)
         return finished

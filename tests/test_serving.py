@@ -10,8 +10,25 @@ import pytest
 from repro.models.lm import (LMConfig, decode_step, forward, init_cache,
                              init_params)
 from repro.serving.engine import ServingEngine
+from repro.serving.errors import (AdmissionRejected, BucketOverflow,
+                                  DeadlineExceeded, PoolExhausted,
+                                  RequestFailed)
 from repro.serving.kv_cache import PagedKVCache, PagePool
 from repro.serving.legacy import LegacyServingEngine
+from repro.serving.scheduler import RequestState, pow2_bucket
+
+
+class FakeClock:
+    """Deterministic clock for deadline tests (seconds)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
 
 
 def tiny_cfg():
@@ -376,6 +393,344 @@ class TestRefcountConservation:
         st = eng.kv.pool.stats
         assert st.allocated_pages == st.freed_pages
         assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+    def test_randomized_workload_with_cancels_conserves_pages(self):
+        """Same property trace with interleaved ``cancel()`` calls at
+        arbitrary lifecycle points (queued, mid-prefill-chunk, mid-
+        decode, COW/prefix sharers): conservation holds every step,
+        every request reaches a terminal state, the pool drains."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=24,
+                            max_batch=3, chunk_size=4, token_budget=8)
+        rng = random.Random(4321)
+        ids = []
+        for step in range(300):
+            if len(ids) < 14 and rng.random() < 0.4:
+                n = rng.randint(1, 14)
+                base = rng.choice([0, 40])       # some shared prefixes
+                ids.append(eng.submit([(base + j) % 97 for j in range(n)],
+                                      max_new_tokens=rng.randint(1, 5)))
+            if ids and rng.random() < 0.15:
+                eng.cancel(rng.choice(ids))      # may be terminal: False
+            eng.step()
+            st = eng.kv.pool.stats
+            held = len(eng.kv.pool.refs)
+            assert st.allocated_pages == st.freed_pages + held
+            assert held + eng.kv.pool.num_free == eng.kv.pool.num_pages
+            if len(ids) >= 14 and not eng.waiting and not eng.running:
+                break
+        eng.run()
+        assert len(eng.scheduler.done) == 14     # all terminal
+        assert eng.metrics["cancellations"] > 0
+        st = eng.kv.pool.stats
+        assert st.allocated_pages == st.freed_pages
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+
+class TestCancellation:
+    def make(self, **kw):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        kw.setdefault("page_size", 4)
+        kw.setdefault("num_pages", 64)
+        kw.setdefault("max_batch", 4)
+        return cfg, params, ServingEngine(cfg, params, **kw)
+
+    def test_cancel_queued_request(self):
+        _, _, eng = self.make()
+        rid = eng.submit([1, 2, 3], max_new_tokens=4)
+        assert eng.cancel(rid)
+        assert eng.run() == []
+        r = eng.result(rid)
+        assert r.state is RequestState.CANCELLED
+        assert r.out_tokens == []
+        assert eng.metrics["cancellations"] == 1
+
+    def test_cancel_unknown_or_terminal_returns_false(self):
+        _, _, eng = self.make()
+        rid = eng.submit([1, 2, 3], max_new_tokens=2)
+        assert not eng.cancel(rid + 99)
+        eng.run()
+        assert not eng.cancel(rid)           # already FINISHED
+        assert eng.metrics["cancellations"] == 0
+
+    def test_cancel_mid_decode_frees_pages_keeps_sibling_exact(self):
+        cfg, params, eng = self.make(max_batch=2)
+        prompts = [[(5 + 13 * i + j) % 97 for j in range(8)]
+                   for i in range(2)]
+        rids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        for _ in range(4):
+            eng.step()
+        victim = eng.running[rids[0]]
+        assert victim.state is RequestState.DECODE
+        held_before = len(eng.kv.pool.refs)
+        assert eng.cancel(rids[0])
+        assert len(eng.kv.pool.refs) < held_before   # pages released NOW
+        done = {r.req_id: r for r in eng.run()}
+        assert set(done) == {rids[1]}
+        assert done[rids[1]].out_tokens == dense_rollout(
+            cfg, params, prompts[1], 8)
+        partial = eng.result(rids[0])
+        assert partial.state is RequestState.CANCELLED
+        assert 0 < len(partial.out_tokens) < 8       # partials preserved
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+    def test_cancel_during_prefill_chunk(self):
+        """Cancel a long request while it is mid-chunked-prefill: its
+        pages release immediately and the other requests still match
+        the dense oracle."""
+        cfg, params, eng = self.make(chunk_size=8, token_budget=16,
+                                     num_pages=96)
+        long_prompt = [(3 + 7 * i) % 97 for i in range(40)]
+        shorts = [[50 + i, 2, 3, 4, 5] for i in range(2)]
+        rid_long = eng.submit(long_prompt, max_new_tokens=4)
+        rids = [eng.submit(p, max_new_tokens=4) for p in shorts]
+        eng.step()
+        req = eng.running[rid_long]
+        assert req.state is RequestState.PREFILL
+        assert 0 < req.computed < len(long_prompt)   # mid-chunk
+        held_before = len(eng.kv.pool.refs)
+        assert eng.cancel(rid_long)
+        assert len(eng.kv.pool.refs) < held_before
+        done = {r.req_id: r for r in eng.run()}
+        assert set(done) == set(rids)
+        for rid, p in zip(rids, shorts):
+            assert done[rid].out_tokens == dense_rollout(cfg, params, p, 4)
+        assert eng.result(rid_long).state is RequestState.CANCELLED
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+    def test_cancel_prefix_sharer_drops_one_ref_only(self):
+        """Cancelling one of several prefix-sharing requests releases
+        exactly its reference on the shared pages; siblings keep theirs
+        and still produce oracle-exact tokens."""
+        cfg, params, eng = self.make()
+        shared = [5, 6, 7, 8, 9, 10, 11, 12]     # 2 full pages at ps=4
+        prompts = [shared + [30 + i] for i in range(3)]
+        rids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        for _ in range(2):
+            eng.step()
+        assert eng.kv.pool.stats.prefix_hits > 0
+        shared_page = eng.kv.tables[rids[1]][0]
+        assert eng.kv.pool.refs[shared_page] == 3
+        assert eng.cancel(rids[0])
+        assert eng.kv.pool.refs[shared_page] == 2    # sharers keep theirs
+        done = {r.req_id: r for r in eng.run()}
+        assert set(done) == {rids[1], rids[2]}
+        for rid, p in zip(rids[1:], prompts[1:]):
+            assert done[rid].out_tokens == dense_rollout(cfg, params, p, 5)
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+    def test_cancel_cow_sharer_conserves_pages(self):
+        """KV-level: free one sharer after a copy-on-write split — the
+        sibling keeps its pages and the pool conserves."""
+        kv = PagedKVCache(n_layers=2, n_kv_heads=2, head_dim=8,
+                          page_size=4, num_pages=16, dtype=jnp.float32)
+        assert kv.create(0, list(range(8)))
+        kv.advance(0, 8)
+        assert kv.create(1, list(range(8)))          # shares both pages
+        # divergent write through seq 1's shared page forces COW
+        kv.lengths[1] = 7
+        k_t = jnp.ones((2, 8))
+        kv.append(1, [(k_t, k_t), (k_t, k_t)])
+        assert kv.pool.stats.cow_copies == 1
+        kv.free_seq(1)                               # "cancel" the sharer
+        st = kv.pool.stats
+        assert st.allocated_pages == st.freed_pages + len(kv.pool.refs)
+        assert all(p in kv.pool.refs for p in kv.tables[0])
+        kv.free_seq(0)
+        assert kv.pool.num_free == kv.pool.num_pages
+
+
+class TestDeadlines:
+    def make(self, **kw):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        clk = FakeClock()
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=64,
+                            clock=clk, **kw)
+        return clk, eng
+
+    def test_timeout_ms_expires_mid_flight(self):
+        clk, eng = self.make(max_batch=2)
+        rid = eng.submit([1, 2, 3, 4, 5], max_new_tokens=50,
+                         timeout_ms=100)
+        eng.step()
+        eng.step()
+        clk.advance(0.2)                 # past the 100 ms budget
+        eng.step()                       # plan() expires it
+        with pytest.raises(DeadlineExceeded):
+            eng.result(rid)
+        req = eng.scheduler.done[rid]
+        assert req.state is RequestState.TIMED_OUT
+        assert len(req.out_tokens) >= 1              # partials preserved
+        assert eng.metrics["timeouts"] == 1
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+    def test_ttft_deadline_while_queued(self):
+        clk, eng = self.make(max_batch=1)
+        rid_hog = eng.submit([1, 2, 3, 4], max_new_tokens=30)
+        rid = eng.submit([9, 8, 7], max_new_tokens=4,
+                         ttft_deadline_ms=50)
+        eng.step()
+        eng.step()                       # hog holds the only slot
+        clk.advance(0.1)
+        eng.step()
+        with pytest.raises(DeadlineExceeded):
+            eng.result(rid)
+        assert eng.scheduler.done[rid].state is RequestState.TIMED_OUT
+        assert rid_hog in eng.running    # hog unaffected
+        done = eng.run()
+        assert [r.req_id for r in done] == [rid_hog]
+
+    def test_generous_deadlines_are_inert(self):
+        clk, eng = self.make(max_batch=2)
+        rid = eng.submit([1, 2, 3, 4, 5], max_new_tokens=3,
+                         ttft_deadline_ms=1e6, timeout_ms=1e6)
+        done = eng.run()
+        assert [r.req_id for r in done] == [rid]
+        assert eng.metrics["timeouts"] == 0
+
+
+class TestTypedAdmissionErrors:
+    def make(self, **kw):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        kw.setdefault("page_size", 4)
+        kw.setdefault("num_pages", 64)
+        kw.setdefault("max_batch", 2)
+        return ServingEngine(cfg, params, **kw)
+
+    def test_over_cap_prompt_raises_typed(self):
+        eng = self.make(max_pages_per_seq=4)
+        with pytest.raises(AdmissionRejected) as ei:
+            eng.submit(list(range(1, 30)), max_new_tokens=4)
+        assert isinstance(ei.value, ValueError)      # back-compat
+        assert eng.metrics["rejected_submits"] == 1
+
+    def test_queue_depth_bound(self):
+        eng = self.make(max_queue_depth=2)
+        eng.submit([1, 2, 3], max_new_tokens=2)
+        eng.submit([4, 5, 6], max_new_tokens=2)
+        with pytest.raises(AdmissionRejected):
+            eng.submit([7, 8, 9], max_new_tokens=2)
+        assert len(eng.run()) == 2       # accepted ones still serve
+
+    def test_page_watermark_backpressure(self):
+        eng = self.make(num_pages=8, admit_hwm_frac=0.5)
+        assert eng.kv.create(999, list(range(16)))   # 4/8 pages live
+        with pytest.raises(PoolExhausted) as ei:
+            eng.submit([1, 2, 3], max_new_tokens=2)
+        assert isinstance(ei.value, AdmissionRejected)
+        eng.kv.free_seq(999)
+        rid = eng.submit([1, 2, 3], max_new_tokens=2)
+        assert [r.req_id for r in eng.run()] == [rid]
+
+    def test_pow2_bucket_overflow_typed(self):
+        with pytest.raises(BucketOverflow) as ei:
+            pow2_bucket(33, 8, 32)
+        assert isinstance(ei.value, ValueError)
+
+
+class TestStepCapExhaustion:
+    def test_step_cap_times_out_remaining_and_recovers(self):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=64,
+                            max_batch=2)
+        rids = [eng.submit([1 + i, 2, 3, 4, 5, 6, 7, 8],
+                           max_new_tokens=32) for i in range(2)]
+        done = eng.run(max_steps=3)
+        assert done == []
+        assert eng.metrics["steps_exhausted"] == 1
+        assert eng.metrics["timeouts"] == 2
+        for rid in rids:
+            with pytest.raises(DeadlineExceeded):
+                eng.result(rid)
+            assert len(eng.scheduler.done[rid].out_tokens) > 0
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+        # the engine keeps serving after the drain
+        rid2 = eng.submit([5, 6, 7], max_new_tokens=2)
+        assert [r.req_id for r in eng.run()] == [rid2]
+
+
+class TestWatchdogQuarantine:
+    def make(self, **kw):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        kw.setdefault("watchdog_interval", 1)
+        kw.setdefault("max_batch", 2)
+        return ServingEngine(cfg, params, page_size=4, num_pages=64,
+                             **kw)
+
+    def test_stalled_sequence_quarantined(self):
+        eng = self.make(stall_steps=8)
+        rid = eng.submit([1, 2, 3, 4, 5], max_new_tokens=4)
+        eng.step()
+        req = eng.running[rid]
+        assert req.in_decode
+        req.last_advance_step = -1000    # simulate a wedged sequence
+        eng._run_watchdog()
+        assert rid not in eng.running
+        with pytest.raises(RequestFailed):
+            eng.result(rid)
+        assert eng.metrics["watchdog_trips"] >= 1
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+    def test_refcount_leak_repaired_without_victim(self):
+        """An unattributable pool inconsistency is repaired by
+        reconciliation; the in-flight request is NOT failed."""
+        eng = self.make()
+        rid = eng.submit([1, 2, 3, 4, 5, 6, 7, 8], max_new_tokens=6)
+        eng.step()
+        page = eng.kv.pool.free.pop()    # leak: held by nobody
+        eng.kv.pool.refs[page] = 1
+        eng.step()                       # interval=1: repaired here
+        assert eng.metrics["watchdog_trips"] >= 1
+        done = eng.run()
+        assert [r.req_id for r in done] == [rid]
+        st = eng.kv.pool.stats
+        assert st.allocated_pages == st.freed_pages
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+    def test_dead_table_page_quarantined(self):
+        """A block-table row referencing a dead page fails that one
+        sequence; the other request keeps serving."""
+        eng = self.make(max_batch=2)
+        rids = [eng.submit([10 + i, 2, 3, 4, 5], max_new_tokens=6)
+                for i in range(2)]
+        eng.step()
+        eng.kv.tables[rids[0]][-1] = eng.kv.pool.num_pages + 3
+        eng.kv._bump(rids[0])
+        done = eng.run()
+        assert [r.req_id for r in done] == [rids[1]]
+        with pytest.raises(RequestFailed):
+            eng.result(rids[0])
+        assert eng.metrics["watchdog_trips"] >= 1
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+
+class TestAgingAdmission:
+    def test_blocked_request_is_bypassed_then_ages_in(self):
+        """Best-effort FIFO: small late arrivals bypass a page-blocked
+        big request, but the big one still lands (starvation-free) and
+        counts in ``aged_admissions``."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=8,
+                            max_batch=2, aging_steps=3)
+        rid_r = eng.submit([(j % 90) + 1 for j in range(8)],
+                           max_new_tokens=8)
+        # 7 pages needed > the ≤6 ever free while rid_r runs: blocked
+        rid_a = eng.submit([(60 + j) % 97 for j in range(24)],
+                           max_new_tokens=2)
+        rid_b = eng.submit([50, 51, 52, 53], max_new_tokens=2)
+        done = eng.run()
+        ids = [r.req_id for r in done]
+        assert set(ids) == {rid_r, rid_a, rid_b}
+        assert ids.index(rid_b) < ids.index(rid_a)   # bypass happened
+        assert eng.metrics["aged_admissions"] >= 1
+        assert eng.metrics["rejected_admissions"] > 0
 
 
 class TestMixedAttentionKernel:
