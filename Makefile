@@ -2,10 +2,15 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test gradcheck conformance chaos bench-smoke bench lint docs
+.PHONY: test test-fast gradcheck conformance chaos bench-smoke bench lint docs
 
 test:
 	$(PY) -m pytest -x -q
+
+# tier-1 gate: everything except the @pytest.mark.slow heavyweights
+# (chaos / conformance / gradcheck matrices run in the full CI job)
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
 
 # fault-injection matrix: the engine must fail ONE request, never the
 # step loop (tests/test_chaos.py gates watchdog_trips == injected,

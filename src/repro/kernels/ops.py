@@ -313,6 +313,24 @@ def fused_elementwise(fn, *xs, interpret: Optional[bool] = None):
     return result[0] if single else result
 
 
+def gumbel_perturb(logits: jnp.ndarray,
+                   uniform: jnp.ndarray) -> jnp.ndarray:
+    """Gumbel-max perturbation for in-jit sampling: ``logits +
+    (-log(-log(u)))`` as ONE fused elementwise kernel.
+
+    ``argmax`` of the result is a categorical draw from
+    ``softmax(logits)`` (the Gumbel-max trick) — the serving sampler
+    applies it to top-k/top-p-filtered logits so masked lanes
+    (``-inf``) can never win.  ``uniform`` must be in (0, 1); shapes
+    must match.  Elementwise, so the fusion-queue Pallas lowering
+    (`fused_elementwise`) runs it as a single VPU pass on TPU and a
+    single XLA fusion elsewhere."""
+    def perturb(lg, u):
+        return lg + -jnp.log(-jnp.log(u))
+    return fused_elementwise(perturb, logits.astype(jnp.float32),
+                             uniform.astype(jnp.float32))
+
+
 def make_fused_elementwise(fn):
     """Dispatch-cache ``wrap`` hook: jitted Pallas lowering of an
     elementwise composite (used by the fusion queue on TPU)."""

@@ -1,8 +1,10 @@
 """Serving stack: paged KV allocator (§5.3), pure-Python scheduler
 (control plane) and jitted executor (data plane) behind the
-``ServingEngine`` facade — plus the request-lifecycle fault-tolerance
-layer: typed ``errors``, the invariant ``watchdog``, and the
-deterministic ``faults`` injection harness."""
+``ServingEngine`` facade — plus in-jit ``sampling`` (greedy /
+temperature / top-k / top-p), speculative-decoding proposers
+(``spec``), and the request-lifecycle fault-tolerance layer: typed
+``errors``, the invariant ``watchdog``, and the deterministic
+``faults`` injection harness."""
 
 from . import errors
 from .engine import ServingEngine
@@ -13,7 +15,10 @@ from .executor import Executor
 from .faults import FaultInjector, FaultSpec
 from .kv_cache import PagedKVCache, PagePool
 from .legacy import LegacyServingEngine
+from .sampling import SamplingParams
 from .scheduler import Request, RequestState, Scheduler, StepPlan
+from .spec import (DraftModelProposer, FixedProposer, NgramProposer,
+                   Proposer)
 from .watchdog import Violation, Watchdog
 
 __all__ = ["ServingEngine", "LegacyServingEngine", "PagedKVCache",
@@ -21,4 +26,6 @@ __all__ = ["ServingEngine", "LegacyServingEngine", "PagedKVCache",
            "RequestState", "errors", "ServingError", "AdmissionRejected",
            "PoolExhausted", "BucketOverflow", "DeadlineExceeded",
            "RequestFailed", "FaultInjected", "FaultInjector",
-           "FaultSpec", "Watchdog", "Violation"]
+           "FaultSpec", "Watchdog", "Violation", "SamplingParams",
+           "Proposer", "NgramProposer", "DraftModelProposer",
+           "FixedProposer"]

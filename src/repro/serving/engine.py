@@ -15,10 +15,18 @@ Loop per step:
      (≤ ``chunk_size`` tokens, env ``REPRO_PREFILL_CHUNK``) filling the
      rest of the budget,
   2. the executor scatters the batch's K/V into pages, attends, and
-     samples — one device program, donated KV page arrays — and flags
+     SAMPLES IN-JIT (greedy / temperature / top-k / top-p, per-request
+     params as operands, position-keyed PRNG — logits never visit the
+     host) — one device program, donated KV page arrays — and flags
      any slot whose logits went non-finite,
   3. the scheduler commits: cursors advance, finished sequences release
      pages refcount-immediately (§5.5) for the very next admission.
+     With ``spec_k > 0`` a proposer (default ``spec.NgramProposer``)
+     widens decode spans with draft tokens verified in the same step;
+     commit keeps the longest agreeing prefix + one correction token
+     and rewinds KV past the first rejection — bitwise-identical
+     output to non-speculative decoding at any temperature, tracked by
+     ``metrics["spec_acceptance_rate"]``.
 
 Fault tolerance wraps the loop (the robustness half of "serve heavy
 traffic from millions of users"): a flagged or crashed or corrupted
@@ -47,7 +55,9 @@ from .errors import DeadlineExceeded, RequestFailed
 from .executor import Executor
 from .faults import FaultInjector
 from .kv_cache import PagedKVCache
+from .sampling import SamplingParams
 from .scheduler import Request, RequestState, Scheduler
+from .spec import NgramProposer, Proposer
 from .watchdog import Watchdog
 
 __all__ = ["ServingEngine", "Request", "RequestState"]
@@ -61,6 +71,9 @@ class ServingEngine:
     def __init__(self, cfg: LM.LMConfig, params, *, page_size: int = 16,
                  num_pages: int = 512, max_batch: int = 8,
                  greedy: bool = True,
+                 sampling: Optional[SamplingParams] = None,
+                 spec_k: int = 0,
+                 proposer: Optional[Proposer] = None,
                  chunk_size: Optional[int] = None,
                  token_budget: Optional[int] = None,
                  max_pages_per_seq: Optional[int] = None,
@@ -81,7 +94,18 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
-        self.greedy = greedy
+        # the sampling contract: an explicit ``sampling`` wins;
+        # otherwise ``greedy`` picks argmax (temperature 0) or plain
+        # temperature-1.0 sampling — ``greedy=False`` actually samples
+        if sampling is None:
+            sampling = SamplingParams() if greedy \
+                else SamplingParams(temperature=1.0)
+        self.sampling = sampling.validate()
+        self.greedy = self.sampling.greedy
+        if spec_k > 0 and proposer is None:
+            proposer = NgramProposer()
+        self.spec_k = spec_k
+        self.proposer = proposer
         self.kv = PagedKVCache(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, page_size=page_size, num_pages=num_pages,
@@ -93,6 +117,7 @@ class ServingEngine:
             max_pages_per_seq=max_pages_per_seq,
             max_queue_depth=max_queue_depth,
             admit_hwm_frac=admit_hwm_frac, aging_steps=aging_steps,
+            sampling=self.sampling, spec_k=spec_k, proposer=proposer,
             clock=clock)
         # size the device table mirror at the pages bucket cap up front:
         # the delta path then never pays a width-growth rebuild
@@ -112,17 +137,21 @@ class ServingEngine:
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
-               *, ttft_deadline_ms: Optional[float] = None,
+               *, sampling: Optional[SamplingParams] = None,
+               ttft_deadline_ms: Optional[float] = None,
                timeout_ms: Optional[float] = None) -> int:
         """Queue a request; returns its request id.  Admission happens
         lazily at the next step, when pages are available.  Raises
         :class:`~.errors.AdmissionRejected` (over-cap prompt, queue at
         ``max_queue_depth``, or page-watermark backpressure) — the
-        typed signal for a front door to shed load.  ``ttft_deadline_ms``
-        / ``timeout_ms`` arm per-request deadlines checked every step."""
+        typed signal for a front door to shed load.  ``sampling``
+        overrides the engine-wide :class:`SamplingParams` for this
+        request only (per-request params are jit operands — no
+        recompile).  ``ttft_deadline_ms`` / ``timeout_ms`` arm
+        per-request deadlines checked every step."""
         return self.scheduler.submit(
-            prompt, max_new_tokens, ttft_deadline_ms=ttft_deadline_ms,
-            timeout_ms=timeout_ms)
+            prompt, max_new_tokens, sampling=sampling,
+            ttft_deadline_ms=ttft_deadline_ms, timeout_ms=timeout_ms)
 
     def cancel(self, req_id: int) -> bool:
         """Cancel a request at any point in its lifecycle — queued,
@@ -286,21 +315,30 @@ class ServingEngine:
 
     @property
     def metrics(self) -> Dict[str, Any]:
-        """Counter snapshot: scheduler counters (``steps``,
-        ``prefill_chunks``, ``preemptions``, ``zero_decode_steps``,
-        ``cancellations``, ``timeouts``, ``failed_requests``,
-        ``aged_admissions``, ...) plus ``bucket_compiles`` (jitted
-        ``unified_step`` variants — must stay ≤ :attr:`bucket_count`),
-        ``page_hwm`` (live-page high-water mark), ``table_upload_rows``
-        (host→device block-table rows flushed by the delta mirror),
-        and the fault-tolerance counters ``watchdog_trips``,
-        ``executor_failures``, ``steps_exhausted``."""
+        """Counter snapshot.  Scheduler counters: ``steps``,
+        ``prefills``, ``prefill_chunks``, ``decoded_tokens``,
+        ``preemptions``, ``zero_decode_steps``, ``cancellations``,
+        ``timeouts``, ``failed_requests``, ``aged_admissions``,
+        ``rejected_admissions``, ``rejected_submits``; speculative
+        decoding: ``spec_steps``, ``proposed_tokens``,
+        ``accepted_tokens`` and the derived ``spec_acceptance_rate``
+        (accepted / proposed — the first-class signal for how much
+        speculative work paid off); fault tolerance:
+        ``watchdog_trips``, ``executor_failures``, ``steps_exhausted``;
+        executor/KV: ``bucket_compiles`` (jitted ``unified_step``
+        variants — must stay ≤ :attr:`bucket_count`), ``page_hwm``
+        (live-page high-water mark), ``table_upload_rows`` (host→device
+        block-table rows flushed by the delta mirror), and
+        ``table_full_rebuilds``."""
         m = dict(self.scheduler.metrics)
         m.update(self._counters)
         m["bucket_compiles"] = self.executor.compile_count
         m["page_hwm"] = self.kv.pool.stats.page_hwm
         m["table_upload_rows"] = self.kv.upload_rows_total
         m["table_full_rebuilds"] = self.kv.upload_full_rebuilds
+        m["spec_acceptance_rate"] = (
+            m["accepted_tokens"] / m["proposed_tokens"]
+            if m["proposed_tokens"] else 0.0)
         return m
 
     @property

@@ -16,7 +16,13 @@ runs the whole step's compute as a single XLA executable:
     pages — no per-slot contiguous cache is ever gathered),
   * the KV page arrays are DONATED: ``unified_step`` consumes them and
     returns the updated pair; while the step runs the host holds no
-    alias (``PagedKVCache.take_kv``/``put_kv`` enforce this).
+    alias (``PagedKVCache.take_kv``/``put_kv`` enforce this),
+  * SAMPLING runs in the same executable (``serving.sampling``):
+    greedy / temperature / top-k / top-p with per-slot params as tiny
+    operand arrays and position-keyed PRNG — plus the K speculative
+    verify rows per slot — so the (rows, vocab) logits NEVER cross to
+    host; the step's only outputs are (S, K+1) token ids and (S,)
+    fault flags.
 
 Shapes are bucketed (powers of two: token batch up to ``token_budget``,
 pages per sequence up to ``max_pages_per_seq``; slot count fixed at
@@ -38,6 +44,7 @@ import numpy as np
 from ..models import layers as L
 from ..models.attention import paged_attention
 from ..models import lm as LM
+from . import sampling
 from .kv_cache import PagedKVCache
 from .scheduler import StepPlan
 
@@ -83,10 +90,14 @@ class Executor:
     # -- host entry -------------------------------------------------------
     def execute(self, plan: StepPlan, kv: PagedKVCache
                 ) -> Tuple[np.ndarray, np.ndarray]:
-        """Run one unified step; returns ((max_batch,) sampled tokens,
-        (max_batch,) bool non-finite-logits flags — the fault barrier
-        the engine uses to quarantine a poisoned sequence without
-        losing the step for everyone else)."""
+        """Run one unified step; returns ((max_batch, K+1) sampled
+        tokens — column 0 is the step's next token, columns 1..K the
+        target tokens at the speculative draft positions — and a
+        (max_batch,) bool non-finite-logits flag array, the fault
+        barrier the engine uses to quarantine a poisoned sequence
+        without losing the step for everyone else).  Sampling runs
+        INSIDE the jit: only these two small arrays ever cross the
+        device boundary — the (S·(K+1), V) logits never do."""
         tables = kv.device_tables(plan.slot_seqs, plan.p_bucket)
         ks, vs = kv.take_kv()
         try:
@@ -94,7 +105,10 @@ class Executor:
                 plan.p_bucket, ks, vs,
                 jnp.asarray(plan.tokens), jnp.asarray(plan.seg_ids),
                 jnp.asarray(plan.positions), jnp.asarray(plan.write_idx),
-                tables, jnp.asarray(plan.sample_idx))
+                tables, jnp.asarray(plan.sample_idx),
+                jnp.asarray(plan.sample_pos), jnp.asarray(plan.temps),
+                jnp.asarray(plan.top_ks), jnp.asarray(plan.top_ps),
+                jnp.asarray(plan.seeds))
         finally:
             if ks is not None:
                 kv.put_kv(ks, vs)
@@ -106,12 +120,18 @@ class Executor:
                       v_pages: List[jnp.ndarray],
                       tokens: jnp.ndarray, seg_ids: jnp.ndarray,
                       positions: jnp.ndarray, write_idx: jnp.ndarray,
-                      tables: jnp.ndarray, sample_idx: jnp.ndarray
+                      tables: jnp.ndarray, sample_idx: jnp.ndarray,
+                      sample_pos: jnp.ndarray, temps: jnp.ndarray,
+                      top_ks: jnp.ndarray, top_ps: jnp.ndarray,
+                      seeds: jnp.ndarray
                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                  List[jnp.ndarray], List[jnp.ndarray]]:
         """tokens/seg_ids/positions/write_idx: (T,); tables: (S, W>=P)
         full-width block-table mirror, narrowed here to the static
-        ``p_bucket``; sample_idx: (S,).  Returns ((S,) argmax tokens,
+        ``p_bucket``; sample_idx: (S, K+1) token-batch rows to sample;
+        sample_pos/temps/top_ks/top_ps/seeds: (S,) per-slot sampling
+        state (operands, never statics — per-request params cannot
+        trigger a recompile).  Returns ((S, K+1) sampled int32 tokens,
         (S,) non-finite-logits flags, new K/V page arrays)."""
         cfg = self.cfg
         t = tokens.shape[0]
@@ -166,11 +186,23 @@ class Executor:
                        cfg.norm_offset) if cfg.norm == "rms" else \
             L.layer_norm(x, self.params["final_norm"],
                          self.params.get("final_norm_b"), cfg.norm_eps)
-        xs = jnp.take(x, sample_idx, axis=0)                   # (S, D)
+        s, kp1 = sample_idx.shape
+        xs = jnp.take(x, sample_idx.reshape(-1), axis=0)  # (S*(K+1), D)
         logits = xs @ (self.params["embed"].T if cfg.tie_embeddings
                        else self.params["lm_head"])
         # per-slot fault barrier: a NaN/inf logits row (poisoned KV,
         # overflowed activations) flags JUST that slot — the engine
         # quarantines the one request instead of crashing the step loop
-        bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
-        return jnp.argmax(logits, axis=-1), bad, new_k, new_v
+        bad = jnp.any(~jnp.all(jnp.isfinite(logits), axis=-1)
+                      .reshape(s, kp1), axis=-1)
+        # sample IN-JIT: row i of a slot draws the token at absolute
+        # position sample_pos + i under that slot's params — the PRNG
+        # key depends only on (seed, position), which is what makes the
+        # speculative targets bitwise-equal to a non-speculative replay
+        gen_pos = (sample_pos[:, None]
+                   + jnp.arange(kp1, dtype=jnp.int32)[None, :])
+        toks = sampling.sample_tokens(
+            logits, jnp.repeat(temps, kp1), jnp.repeat(top_ks, kp1),
+            jnp.repeat(top_ps, kp1), jnp.repeat(seeds, kp1),
+            gen_pos.reshape(-1))
+        return toks.reshape(s, kp1), bad, new_k, new_v

@@ -371,6 +371,28 @@ class PagedKVCache:
                 return False
         return True
 
+    def truncate(self, seq_id: int, n_tokens: int) -> bool:
+        """Shrink the block table to cover exactly ``n_tokens``
+        positions, releasing the tail pages — the speculative-decoding
+        rewind (``Scheduler.commit`` drops the pages a rejected draft
+        run reserved past the committed end).  ``lengths`` is clamped
+        too, so a page whose only content was speculative K/V can be
+        freely re-filled later.  Bumps the table version when anything
+        changed (the device mirror row re-uploads next step).  Returns
+        True when pages were released or the length moved."""
+        table = self.tables[seq_id]
+        keep = self.pages_needed(n_tokens)
+        changed = False
+        while len(table) > keep:
+            self.pool.release(table.pop())
+            changed = True
+        if self.lengths[seq_id] > n_tokens:
+            self.lengths[seq_id] = n_tokens
+            changed = True
+        if changed:
+            self._bump(seq_id)
+        return changed
+
     def advance(self, seq_id: int, n_tokens: int) -> None:
         """Mark K/V valid (written) up to ``n_tokens`` — called after a
         ``unified_step``/batched write lands."""

@@ -31,6 +31,19 @@ Scheduling policy per step (``token_budget`` tokens total):
   2. remaining budget goes to prefill chunks in FIFO admission order,
      ``chunk_size`` (env ``REPRO_PREFILL_CHUNK``) tokens max per request
      per step.
+
+Speculative decoding (``spec_k > 0`` + a ``spec.Proposer``) widens a
+decode span: the pending token plus up to ``spec_k`` host-proposed
+draft tokens travel as one multi-token segment, the executor samples a
+target token at EVERY draft position in the same jitted call, and
+``commit`` keeps the longest prefix where target == draft plus the
+first correction token.  Rejected drafts rewind: ``kv.advance`` only
+ever covers committed tokens (no stale ``filled`` counts) and
+``kv.truncate`` releases the pages past the committed end (bumping the
+table version so the device mirror row re-uploads).  Sampling params
+(temperature/top-k/top-p/seed) ride per-request and are resolved
+in-jit — see ``sampling.py`` for why this makes speculation exact at
+any temperature.
 """
 
 from __future__ import annotations
@@ -45,6 +58,8 @@ import numpy as np
 
 from .errors import (AdmissionRejected, BucketOverflow, PoolExhausted)
 from .kv_cache import PagedKVCache
+from .sampling import SamplingParams
+from .spec import Proposer
 
 
 class RequestState(Enum):
@@ -83,6 +98,7 @@ class Request:
                                  # prompt content, at/above it divergent
     # lifecycle / fault tolerance
     state: RequestState = RequestState.QUEUED
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     ttft_deadline_ms: Optional[float] = None   # first token due by
     timeout_ms: Optional[float] = None         # whole request due by
     error: Optional[str] = None  # why a terminal state was reached
@@ -106,24 +122,36 @@ class Request:
 
 @dataclass
 class Span:
-    """One request's scheduled token span [start, end) for this step."""
+    """One request's scheduled token span [start, end) for this step.
+    ``drafts`` extends a decode span speculatively: the draft tokens
+    are fed (and their K/V written) at positions ``end .. end+len-1``
+    but enter ``out_tokens`` only if the executor's target samples
+    agree (``Scheduler.commit``)."""
     req: Request
     start: int
     end: int
     sample: bool                 # span covers the last history token
     decode: bool                 # steady-state decode span
+    drafts: List[int] = field(default_factory=list)
 
 
 @dataclass
 class StepPlan:
-    """Host-built, bucket-padded operands for one ``unified_step``."""
+    """Host-built, bucket-padded operands for one ``unified_step``.
+    K = ``spec_k`` is fixed per engine, so every operand shape below is
+    constant across steps (no bucket growth from speculation)."""
     spans: List[Span]
     slot_seqs: List[int]         # slot -> seq id (-1 = empty slot)
     tokens: np.ndarray           # (T,) int32, 0-padded
     seg_ids: np.ndarray          # (T,) int32, -1 = padding
     positions: np.ndarray        # (T,) int32
     write_idx: np.ndarray        # (T,) int32 flat page slot, OOB = skip
-    sample_idx: np.ndarray       # (S,) int32 token-batch row per slot
+    sample_idx: np.ndarray       # (S, K+1) int32 token-batch rows
+    sample_pos: np.ndarray       # (S,) int32 index of first new token
+    temps: np.ndarray            # (S,) f32 per-slot temperature
+    top_ks: np.ndarray           # (S,) int32 per-slot top-k (0 = off)
+    top_ps: np.ndarray           # (S,) f32 per-slot top-p (1 = off)
+    seeds: np.ndarray            # (S,) uint32 per-slot PRNG seed
     n_tokens: int                # live tokens before padding
     t_bucket: int
     p_bucket: int
@@ -149,9 +177,17 @@ class Scheduler:
                  max_queue_depth: Optional[int] = None,
                  admit_hwm_frac: float = 1.0,
                  aging_steps: int = 32,
+                 sampling: Optional[SamplingParams] = None,
+                 spec_k: int = 0,
+                 proposer: Optional[Proposer] = None,
                  clock: Callable[[], float] = time.perf_counter):
         self.kv = kv
         self.max_batch = max_batch
+        self.default_sampling = (sampling or SamplingParams()).validate()
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        self.spec_k = spec_k
+        self.proposer = proposer
         self.chunk_size = chunk_size or int(
             os.environ.get("REPRO_PREFILL_CHUNK", "16"))
         budget = token_budget or max(2 * max_batch, self.chunk_size)
@@ -180,6 +216,7 @@ class Scheduler:
             "preemptions": 0, "zero_decode_steps": 0,
             "cancellations": 0, "timeouts": 0, "failed_requests": 0,
             "aged_admissions": 0, "rejected_submits": 0,
+            "proposed_tokens": 0, "accepted_tokens": 0, "spec_steps": 0,
         }
 
     # -- bucket contract --------------------------------------------------
@@ -205,7 +242,8 @@ class Scheduler:
 
     # -- admission --------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
-               *, ttft_deadline_ms: Optional[float] = None,
+               *, sampling: Optional[SamplingParams] = None,
+               ttft_deadline_ms: Optional[float] = None,
                timeout_ms: Optional[float] = None) -> int:
         total = len(prompt) + max_new_tokens
         if self.kv.pages_needed(total) > self.max_pages_per_seq:
@@ -228,6 +266,8 @@ class Scheduler:
                     f"admit_hwm_frac={self.admit_hwm_frac} watermark")
         req = Request(self._next_id, list(prompt), max_new_tokens,
                       submitted_at=self.clock(),
+                      sampling=(sampling or
+                                self.default_sampling).validate(),
                       ttft_deadline_ms=ttft_deadline_ms,
                       timeout_ms=timeout_ms)
         self._next_id += 1
@@ -389,14 +429,25 @@ class Scheduler:
         # a young request can land in a freed low slot)
         order = sorted((self.running[s] for s in self.slots if s >= 0),
                        key=lambda r: r.req_id)
-        # decode spans first (liveliness)
+        # decode spans first (liveliness); speculation widens them
         for req in order:
             if not req.in_decode or budget <= 0:
                 continue
-            span = self._reserve(req, req.computed + 1)
+            drafts: List[int] = []
+            if self.spec_k > 0 and self.proposer is not None:
+                cap = min(self.spec_k,
+                          req.max_new_tokens - len(req.out_tokens) - 1,
+                          budget - 1)
+                if cap > 0:
+                    drafts = list(
+                        self.proposer.propose(req.history, cap))[:cap]
+            span = self._reserve(req, req.computed + 1, drafts)
             if span is not None:
                 spans.append(span)
-                budget -= 1
+                budget -= 1 + len(span.drafts)
+                if span.drafts:
+                    self.metrics["spec_steps"] += 1
+                    self.metrics["proposed_tokens"] += len(span.drafts)
         # prefill chunks with whatever budget remains
         for req in order:
             if req.req_id not in self.running or req.in_decode:
@@ -420,25 +471,38 @@ class Scheduler:
             return None
         return self._pad(spans)
 
-    def _reserve(self, req: Request, end: int) -> Optional[Span]:
+    def _reserve(self, req: Request, end: int,
+                 drafts: Sequence[int] = ()) -> Optional[Span]:
         """Allocate pages + COW-protect the span's written range; preempt
-        the request itself when the pool is dry."""
+        the request itself when the pool is dry.  ``drafts`` extend the
+        reservation past ``end`` (always-divergent speculative writes);
+        when the pool can't cover the speculative tail the drafts are
+        shed FIRST and the span degrades to a plain reservation."""
         start = req.computed
+        end_spec = end + len(drafts)
         write_from = max(start, self.kv.lengths[req.req_id])
         divergent = end > req.created_len
-        if not self.kv.ensure_capacity(req.req_id, end) or \
-                not self.kv.make_writable(req.req_id, write_from,
-                                          max(end, write_from),
-                                          divergent=divergent):
+        ok = (self.kv.ensure_capacity(req.req_id, end_spec)
+              and self.kv.make_writable(req.req_id, write_from,
+                                        max(end, write_from),
+                                        divergent=divergent)
+              and self.kv.make_writable(req.req_id, max(end, write_from),
+                                        max(end_spec, write_from),
+                                        divergent=True))
+        if not ok:
+            if drafts:
+                self.kv.truncate(req.req_id,
+                                 max(end, self.kv.lengths[req.req_id]))
+                return self._reserve(req, end)
             self._preempt(req)
             return None
         last = len(req.history) - 1
         return Span(req, start, end, sample=end > last,
-                    decode=req.in_decode)
+                    decode=req.in_decode, drafts=list(drafts))
 
     def _pad(self, spans: List[Span]) -> StepPlan:
         kv = self.kv
-        n = sum(s.end - s.start for s in spans)
+        n = sum(s.end - s.start + len(s.drafts) for s in spans)
         t_bucket = pow2_bucket(n, self.min_t_bucket, self.token_budget)
         max_pages = max(len(kv.tables[s.req.req_id]) for s in spans)
         p_bucket = pow2_bucket(max_pages, self.min_p_bucket,
@@ -450,28 +514,48 @@ class Scheduler:
         pos = np.zeros(t_bucket, np.int32)
         oob = kv.pool.num_pages * kv.page_size
         widx = np.full(t_bucket, oob, np.int32)
-        sample_idx = np.zeros(self.max_batch, np.int32)
+        kp1 = self.spec_k + 1
+        sample_idx = np.zeros((self.max_batch, kp1), np.int32)
+        sample_pos = np.zeros(self.max_batch, np.int32)
+        temps = np.zeros(self.max_batch, np.float32)
+        top_ks = np.zeros(self.max_batch, np.int32)
+        top_ps = np.ones(self.max_batch, np.float32)
+        seeds = np.zeros(self.max_batch, np.uint32)
 
         cursor = 0
         for s in spans:
             hist = s.req.history
-            m = s.end - s.start
+            m = s.end - s.start + len(s.drafts)
             sl = slice(cursor, cursor + m)
-            tokens[sl] = hist[s.start:s.end]
+            tokens[sl] = hist[s.start:s.end] + s.drafts
             seg[sl] = s.req.slot
-            pos[sl] = np.arange(s.start, s.end)
+            pos[sl] = np.arange(s.start, s.start + m)
             # reused-prefix tokens recomputed for logits keep their
             # already-valid K/V: skip the write (stays OOB)
             wfrom = max(s.start, kv.lengths[s.req.req_id])
-            if s.end > wfrom:
+            if s.start + m > wfrom:
                 widx[cursor + (wfrom - s.start): cursor + m] = \
-                    kv.flat_slots(s.req.req_id, wfrom, s.end)
+                    kv.flat_slots(s.req.req_id, wfrom, s.start + m)
             if s.sample:
-                sample_idx[s.req.slot] = cursor + m - 1
+                # one sample row per new token: the pending token's row
+                # plus one per draft (rows of the last 1+len(drafts)
+                # fed tokens); unused tail entries repeat the last row
+                n_s = 1 + len(s.drafts)
+                rows = cursor + (m - n_s) + np.arange(n_s)
+                sample_idx[s.req.slot, :n_s] = rows
+                sample_idx[s.req.slot, n_s:] = rows[-1]
+                sample_pos[s.req.slot] = s.end
+                sp = s.req.sampling
+                temps[s.req.slot] = sp.temperature
+                top_ks[s.req.slot] = sp.top_k
+                top_ps[s.req.slot] = sp.top_p
+                seeds[s.req.slot] = np.uint32(sp.seed & 0xFFFFFFFF)
             cursor += m
         return StepPlan(spans=spans, slot_seqs=list(self.slots),
                         tokens=tokens, seg_ids=seg, positions=pos,
                         write_idx=widx, sample_idx=sample_idx,
+                        sample_pos=sample_pos, temps=temps,
+                        top_ks=top_ks, top_ps=top_ps, seeds=seeds,
                         n_tokens=n, t_bucket=t_bucket, p_bucket=p_bucket)
 
     # -- step commit ------------------------------------------------------
@@ -479,33 +563,66 @@ class Scheduler:
                ) -> List[Request]:
         """Apply a step's results: advance cursors/lengths, append
         sampled tokens, retire finished requests (pages released for the
-        very next admission)."""
+        very next admission).
+
+        ``next_tokens`` is the executor's ``(S, K+1)`` target-token
+        matrix.  For a speculative span the acceptance rule is the
+        standard greedy-verify prefix: with drafts ``d[0..L)`` and
+        target row ``t``, keep ``j = |longest prefix with
+        t[i] == d[i]|`` drafts plus the correction token ``t[j]`` —
+        exactly the tokens a non-speculative loop would have emitted
+        (``sampling.py`` pins the PRNG to (seed, position), so ``t[i]``
+        IS the non-speculative sample at that position).  Rejected
+        drafts rewind: the cursor and ``kv.advance`` stop at the
+        committed end and ``kv.truncate`` releases the speculative-tail
+        pages (no leaked refcounts, no stale ``filled`` counts)."""
         finished: List[Request] = []
         self.metrics["steps"] += 1
         for s in plan.spans:
             req = s.req
             if self.running.get(req.req_id) is not req:
                 continue             # retired mid-step (cancel/fail)
-            req.computed = s.end
+            if not s.sample:         # pure prefill chunk: cursor only
+                req.computed = s.end
+                req.last_advance_step = self.metrics["steps"]
+                self.kv.advance(req.req_id, s.end)
+                req.state = (RequestState.DECODE if req.in_decode
+                             else RequestState.PREFILL)
+                continue
+            row = next_tokens[req.slot]
+            j = 0
+            while j < len(s.drafts) and int(row[j]) == s.drafts[j]:
+                j += 1
+            room = req.max_new_tokens - len(req.out_tokens)
+            take = min(j + 1, room)  # plan() caps drafts so take==j+1;
+            toks = (s.drafts[:j] + [int(row[j])])[:take]
+            req.out_tokens.extend(toks)
+            # accepted drafts were computed in-step; the correction
+            # token was only SAMPLED — its compute runs next step
+            req.computed = s.end + min(j, take)
             req.last_advance_step = self.metrics["steps"]
-            self.kv.advance(req.req_id, s.end)
-            if s.sample:
-                tok = int(next_tokens[req.slot])
-                req.out_tokens.append(tok)
-                if req.first_token_at is None:
-                    req.first_token_at = self.clock()
-                if s.decode:
-                    self.metrics["decoded_tokens"] += 1
-                if req.done:
-                    req.state = RequestState.FINISHED
-                    req.finished_at = self.clock()
-                    self.kv.free_seq(req.req_id)
-                    self.slots[req.slot] = -1
-                    req.slot = -1
-                    del self.running[req.req_id]
-                    self.done[req.req_id] = req
-                    finished.append(req)
-                    continue
+            self.kv.advance(req.req_id, req.computed)
+            if s.drafts:
+                self.metrics["accepted_tokens"] += min(j, take)
+                if j < len(s.drafts):
+                    # rejected tail: drop its pages past the next
+                    # pending token's page (version bump re-uploads
+                    # the device table row)
+                    self.kv.truncate(req.req_id, req.computed + 1)
+            if req.first_token_at is None:
+                req.first_token_at = self.clock()
+            if s.decode:
+                self.metrics["decoded_tokens"] += len(toks)
+            if req.done:
+                req.state = RequestState.FINISHED
+                req.finished_at = self.clock()
+                self.kv.free_seq(req.req_id)
+                self.slots[req.slot] = -1
+                req.slot = -1
+                del self.running[req.req_id]
+                self.done[req.req_id] = req
+                finished.append(req)
+                continue
             # state AFTER any append: a request that just sampled its
             # first token is now in steady-state decode, not prefill
             req.state = (RequestState.DECODE if req.in_decode

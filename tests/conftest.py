@@ -12,6 +12,15 @@ assert "xla_force_host_platform_device_count" not in \
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def pytest_configure(config):
+    # heavyweights (chaos / conformance / gradcheck matrices) opt out of
+    # the tier-1 fast gate with @pytest.mark.slow; `make test-fast`
+    # deselects them, the full-matrix CI job still runs everything
+    config.addinivalue_line(
+        "markers", "slow: heavyweight matrix tests excluded from the "
+        "tier-1 fast gate (run via `make test` / the full CI job)")
+
+
 def _install_hypothesis_stub():
     """Deterministic mini-``hypothesis`` for containers without the real
     package: samples a fixed number of pseudo-random examples per test.

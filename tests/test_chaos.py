@@ -28,6 +28,8 @@ from repro.serving.errors import FaultInjected, RequestFailed
 from repro.serving.faults import FaultInjector, FaultSpec
 from repro.serving.scheduler import RequestState
 
+pytestmark = pytest.mark.slow   # fault matrix: full CI job, not tier-1
+
 CFG = LMConfig(name="chaos-tiny", n_layers=2, d_model=64, n_heads=4,
                n_kv_heads=2, d_ff=128, vocab_size=97,
                param_dtype=jnp.float32, remat="none", attn_backend="ref")

@@ -30,6 +30,8 @@ import repro.nn.functional as F
 import repro.optim as optim
 from repro.core import dispatch as D
 
+pytestmark = pytest.mark.slow   # cold/warm conformance matrix: full CI job
+
 
 @pytest.fixture(autouse=True)
 def fresh_cache():

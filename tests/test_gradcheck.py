@@ -25,6 +25,8 @@ import repro
 import repro.nn.functional as F
 from repro.core import dispatch as D
 
+pytestmark = pytest.mark.slow   # numeric-gradient matrix: full CI job
+
 
 @pytest.fixture(autouse=True)
 def fresh_cache():
