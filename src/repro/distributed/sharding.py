@@ -291,3 +291,62 @@ def cache_specs(cfg: LMConfig, cache: Params, mesh: Mesh) -> Params:
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------
+# serving (paged-pool) specs — the (data, model) serving mesh
+# ----------------------------------------------------------------------
+
+def serving_rules(mesh: Mesh) -> AxisRules:
+    """Serving axis rules: tensor parallel over ``model``, NO FSDP —
+    a decode step is memory-bound, so gathering weight shards per layer
+    (ZeRO-3) would put an all-gather on the latency path every step.
+    Params replicate over ``data``; each data replica serves its own
+    slot lanes against its own page range."""
+    return AxisRules(
+        data=(), batch=(),
+        model="model" if "model" in mesh.axis_names else None)
+
+
+def serving_param_specs(cfg: LMConfig, params: Params, mesh: Mesh
+                        ) -> Params:
+    """``param_spec`` col/row table under :func:`serving_rules` — the
+    SAME head/MLP col/row split training uses, minus the FSDP axis."""
+    rules = serving_rules(mesh)
+    paths = _tree_paths(params)
+    return jax.tree_util.tree_map(
+        lambda p, l: param_spec(p, l, cfg, mesh, rules), paths, params)
+
+
+def serving_param_shardings(cfg: LMConfig, params: Params, mesh: Mesh
+                            ) -> Params:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        serving_param_specs(cfg, params, mesh))
+
+
+def serving_kv_spec(n_kv_heads: int, mesh: Mesh, *,
+                    pages_per_replica: int) -> P:
+    """Spec for one per-layer page-pool array
+    (num_pages_total, page_size, n_kv_heads, head_dim).
+
+    The page axis splits over ``data`` — replica r owns the contiguous
+    page range [r*pages_per_replica, (r+1)*pages_per_replica).  The KV
+    head axis splits over ``model`` when it divides; when it doesn't
+    (GQA head counts vs an awkward tp), fall back to CONTEXT-parallel
+    KV: the page (sequence) axis also takes the ``model`` axis, so each
+    model rank attends a page subset and GSPMD combines the partials."""
+    dat = "data" if "data" in mesh.axis_names else None
+    mdl = "model" if "model" in mesh.axis_names else None
+    tp = mesh.shape.get("model", 1) if mdl else 1
+    if tp > 1 and n_kv_heads % tp == 0:
+        return P(dat, None, mdl, None)
+    if tp > 1 and pages_per_replica % tp == 0:
+        return P((dat, mdl) if dat else mdl, None, None, None)
+    return P(dat, None, None, None)
+
+
+def serving_mirror_spec(mesh: Mesh) -> P:
+    """Block-table mirror (R*S, W): slot rows split over ``data`` —
+    replica r's S rows land on its own devices, widths replicate."""
+    return P("data" if "data" in mesh.axis_names else None, None)

@@ -36,10 +36,45 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh() -> jax.sharding.Mesh:
-    """Whatever devices exist, as a (data, model) mesh with model=1."""
+def make_local_mesh(tp: Optional[int] = None) -> jax.sharding.Mesh:
+    """Whatever devices exist, as a (data, model) mesh.
+
+    ``tp`` sets the ``model`` axis extent (default 1 — pure data
+    parallel, the historical behavior); it must divide the local device
+    count.  ``make_local_mesh(tp=2)`` on a 8-device host is the local
+    TP testing mesh the hardcoded ``(n, 1)`` used to make impossible."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    tp = tp or 1
+    if tp < 1 or n % tp != 0:
+        from ..serving.errors import MeshConfigError
+        raise MeshConfigError(
+            f"tp={tp} must be >= 1 and divide the local device "
+            f"count ({n})")
+    return jax.make_mesh((n // tp, tp), ("data", "model"))
+
+
+def mesh_for_serving(n_devices: Optional[int] = None, tp: int = 1
+                     ) -> jax.sharding.Mesh:
+    """A validated (data, model) serving mesh over ``n_devices``
+    (default: all local devices) with tensor-parallel degree ``tp``.
+
+    Raises :class:`repro.serving.errors.MeshConfigError` — never a bare
+    ``ValueError`` — when the shape can't be built: ``tp`` not dividing
+    ``n_devices``, or more devices requested than exist.  The serving
+    engine takes the result directly: ``ServingEngine(..., mesh=...)``
+    runs ``data`` replicas of the slot space and shards heads/MLP width
+    over ``model``."""
+    from ..serving.errors import MeshConfigError
+    avail = len(jax.devices())
+    n = n_devices if n_devices is not None else avail
+    if n < 1 or n > avail:
+        raise MeshConfigError(
+            f"n_devices={n} out of range: {avail} device(s) available")
+    if tp < 1 or n % tp != 0:
+        raise MeshConfigError(
+            f"tp={tp} must be >= 1 and divide n_devices={n}")
+    devices = np.asarray(jax.devices()[:n]).reshape(n // tp, tp)
+    return jax.sharding.Mesh(devices, ("data", "model"))
 
 
 def data_axis_names(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

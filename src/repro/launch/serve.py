@@ -75,6 +75,11 @@ def main() -> None:
                     help='fault spec, e.g. "nan_logits@6;'
                          'executor_crash@9" (see serving.faults)')
     ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data replicas (slot space becomes dp*max_batch;"
+                         " dp*tp devices must exist for dp*tp > 1)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree over the model axis")
     ap.add_argument("--json", default=None,
                     help="also dump metrics JSON to this path")
     args = ap.parse_args()
@@ -85,12 +90,16 @@ def main() -> None:
     params = init_params(cfg, jax.random.key(0))
     faults = FaultInjector.parse(args.faults, seed=args.fault_seed) \
         if args.faults else None
+    mesh = None
+    if args.dp * args.tp > 1:
+        from .mesh import mesh_for_serving
+        mesh = mesh_for_serving(args.dp * args.tp, tp=args.tp)
     eng = ServingEngine(cfg, params, page_size=args.page_size,
                         num_pages=args.num_pages,
                         max_batch=args.max_batch,
                         chunk_size=args.chunk,
                         max_queue_depth=args.max_queue_depth,
-                        faults=faults)
+                        faults=faults, mesh=mesh)
 
     prompts = synthetic_workload(args.requests, cfg.vocab_size)
     t0 = time.perf_counter()
@@ -137,9 +146,11 @@ def main() -> None:
         "ttft_mean_s": round(sum(ttfts) / max(len(ttfts), 1), 4),
         "bucket_compiles": m["bucket_compiles"],
         "bucket_budget": eng.bucket_count,
+        "n_replicas": m["n_replicas"],
         **{k: m[k] for k in ("steps", "prefills", "prefill_chunks",
                              "preemptions", "zero_decode_steps",
                              "decoded_tokens", "page_hwm",
+                             "page_hwm_per_replica", "kv_bytes",
                              "table_upload_rows", "prefix_hit_rate",
                              "cancellations", "timeouts",
                              "failed_requests", "watchdog_trips",

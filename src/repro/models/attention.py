@@ -243,6 +243,15 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     gidx = (tables[:, :, None] * ps
             + jnp.arange(ps)[None, None, :]).reshape(s, p * ps)
+    return _paged_attention_ref(q, k_pages, v_pages, gidx, seg_ids,
+                                positions, scale=scale, window=window,
+                                backend=backend)
+
+
+def _paged_attention_ref(q, k_pages, v_pages, gidx, seg_ids, positions,
+                         *, scale, window, backend):
+    t, hq, d = q.shape
+    n_pages, ps, hkv, _ = k_pages.shape
     kf = k_pages.reshape(n_pages * ps, hkv, d)
     vf = v_pages.reshape(n_pages * ps, hkv, d)
     k_cache = jnp.take(kf, gidx, axis=0).transpose(0, 2, 1, 3)
@@ -252,6 +261,20 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     # exactly the pre-paged executor path
     return mixed_attention(q, k_cache, v_cache, seg_ids, positions,
                            scale=scale, window=window, backend=backend)
+
+
+def select_paged_backend(requested: str, *, sharded: bool) -> str:
+    """Kernel-vs-ref selection for the paged executor.
+
+    The Pallas paged-attention kernel prefetches block-table SCALARS to
+    resolve slot→page inside its BlockSpec index map — a whole-array,
+    single-device view.  Under a vmapped replica axis or a GSPMD mesh
+    the kernel would see a SHARD of the page pool with global table ids
+    (and pallas_call batching over the scalar-prefetch grid is not
+    supported), so sharded execution pins the jnp reference path; GSPMD
+    partitions its gather + softmax like any other XLA op.  Single
+    replica on one device keeps whatever the caller asked for."""
+    return requested if not sharded else "ref"
 
 
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,

@@ -85,6 +85,7 @@ class ServingEngine:
                  max_idle_steps: int = 64,
                  exec_failure_limit: int = 3,
                  faults: Optional[FaultInjector] = None,
+                 mesh=None, n_replicas: int = 1,
                  clock: Callable[[], float] = time.perf_counter):
         for spec in cfg.pattern:
             if spec.mixer not in ("attn",):
@@ -94,6 +95,19 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
+        # sharded serving: a (data, model) mesh replicates the slot
+        # space over `data` (S slots -> n_replicas*S slots; `num_pages`
+        # and `token_budget` stay PER replica) and tensor-parallels the
+        # layer compute over `model`.  `n_replicas` alone (no mesh)
+        # runs the same replicated plan/step layout on one device —
+        # the parity testing seam.  The control plane below is mesh-
+        # oblivious either way.
+        if mesh is not None:
+            n_replicas = dict(mesh.shape).get("data", 1)
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.mesh = mesh
+        self.n_replicas = n_replicas
         # the sampling contract: an explicit ``sampling`` wins;
         # otherwise ``greedy`` picks argmax (temperature 0) or plain
         # temperature-1.0 sampling — ``greedy=False`` actually samples
@@ -108,9 +122,19 @@ class ServingEngine:
         self.proposer = proposer
         self.kv = PagedKVCache(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
-            head_dim=cfg.hd, page_size=page_size, num_pages=num_pages,
+            head_dim=cfg.hd, page_size=page_size,
+            num_pages=num_pages * n_replicas, n_replicas=n_replicas,
             dtype=jnp.float32 if cfg.param_dtype == jnp.float32
             else jnp.bfloat16)
+        kv_sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from ..distributed.sharding import (serving_kv_spec,
+                                                serving_mirror_spec)
+            kv_sharding = NamedSharding(mesh, serving_kv_spec(
+                cfg.n_kv_heads, mesh, pages_per_replica=num_pages))
+            self.kv.place_on_mesh(
+                kv_sharding, NamedSharding(mesh, serving_mirror_spec(mesh)))
         self.scheduler = Scheduler(
             self.kv, max_batch=max_batch, chunk_size=chunk_size,
             token_budget=token_budget,
@@ -118,11 +142,13 @@ class ServingEngine:
             max_queue_depth=max_queue_depth,
             admit_hwm_frac=admit_hwm_frac, aging_steps=aging_steps,
             sampling=self.sampling, spec_k=spec_k, proposer=proposer,
-            clock=clock)
+            n_replicas=n_replicas, clock=clock)
         # size the device table mirror at the pages bucket cap up front:
         # the delta path then never pays a width-growth rebuild
         self.kv.mirror_width_hint = self.scheduler.p_buckets()[-1]
-        self.executor = Executor(cfg, params)
+        self.executor = Executor(cfg, params, mesh=mesh,
+                                 n_replicas=n_replicas,
+                                 kv_sharding=kv_sharding)
         self.watchdog = Watchdog(interval=watchdog_interval,
                                  stall_steps=stall_steps)
         # fault injection: ctor arg, else env (None = zero overhead)
@@ -327,13 +353,18 @@ class ServingEngine:
         ``watchdog_trips``, ``executor_failures``, ``steps_exhausted``;
         executor/KV: ``bucket_compiles`` (jitted ``unified_step``
         variants — must stay ≤ :attr:`bucket_count`), ``page_hwm``
-        (live-page high-water mark), ``table_upload_rows`` (host→device
+        (live-page high-water mark), ``page_hwm_per_replica`` (same,
+        per data replica), ``kv_bytes`` (total resident page-pool
+        bytes), ``n_replicas``, ``table_upload_rows`` (host→device
         block-table rows flushed by the delta mirror), and
         ``table_full_rebuilds``."""
         m = dict(self.scheduler.metrics)
         m.update(self._counters)
         m["bucket_compiles"] = self.executor.compile_count
         m["page_hwm"] = self.kv.pool.stats.page_hwm
+        m["page_hwm_per_replica"] = list(self.kv.pool.page_hwm_per_replica)
+        m["kv_bytes"] = self.kv.memory_stats()["kv_bytes"]
+        m["n_replicas"] = self.n_replicas
         m["table_upload_rows"] = self.kv.upload_rows_total
         m["table_full_rebuilds"] = self.kv.upload_full_rebuilds
         m["spec_acceptance_rate"] = (

@@ -13,6 +13,7 @@ Hierarchy::
     ├── AdmissionRejected (ValueError)   submit-time rejection
     │   └── PoolExhausted                page-watermark backpressure
     ├── BucketOverflow (ValueError)      pow2 shape-bucket cap exceeded
+    ├── MeshConfigError (ValueError)     invalid serving mesh shape
     ├── DeadlineExceeded                 ttft/timeout/step-cap expiry
     └── RequestFailed                    quarantined by the watchdog /
         └── FaultInjected                executor fault barrier
@@ -23,8 +24,8 @@ from __future__ import annotations
 from typing import Optional
 
 __all__ = ["ServingError", "AdmissionRejected", "PoolExhausted",
-           "BucketOverflow", "DeadlineExceeded", "RequestFailed",
-           "FaultInjected"]
+           "BucketOverflow", "MeshConfigError", "DeadlineExceeded",
+           "RequestFailed", "FaultInjected"]
 
 
 class ServingError(Exception):
@@ -45,6 +46,13 @@ class PoolExhausted(AdmissionRejected):
 class BucketOverflow(ServingError, ValueError):
     """A size exceeds its pow2 shape-bucket cap (token budget or
     pages-per-sequence) — the shape can never be scheduled."""
+
+
+class MeshConfigError(ServingError, ValueError):
+    """A serving mesh shape cannot be built: tensor-parallel degree not
+    dividing the device count, more devices requested than exist, or a
+    pool/slot count that does not divide across the ``data`` replicas.
+    Raised at construction time — never mid-serve."""
 
 
 class DeadlineExceeded(ServingError):

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import layers as L
-from ..models.attention import paged_attention
+from ..models.attention import paged_attention, select_paged_backend
 from ..models import lm as LM
 from . import sampling
 from .kv_cache import PagedKVCache
@@ -70,10 +70,35 @@ class Executor:
     """Owns the jitted step; stateless between calls except the compile
     bookkeeping."""
 
-    def __init__(self, cfg: LM.LMConfig, params):
+    def __init__(self, cfg: LM.LMConfig, params, *, mesh=None,
+                 n_replicas: int = 1, kv_sharding=None):
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            n_replicas = dict(mesh.shape).get("data", 1)
+            from ..distributed.sharding import serving_param_shardings
+            params = jax.tree_util.tree_map(
+                jax.device_put, params,
+                serving_param_shardings(cfg, params, mesh))
+        self.n_replicas = n_replicas
         self.params = params
         self._layer_params = split_layer_params(cfg, params)
+        # a replica axis (vmap) or a mesh pins the jnp ref attention
+        # path — the Pallas kernel's scalar-prefetch table lookup is a
+        # single-device whole-pool construct (see select_paged_backend)
+        self._attn_backend = select_paged_backend(
+            cfg.attn_backend, sharded=(mesh is not None or n_replicas > 1))
+        # KV pages keep THIS sharding across steps: constrained on the
+        # step outputs so donation round-trips never reshard
+        self._kv_sharding = kv_sharding
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self._plan_sh = {
+                2: NamedSharding(mesh, P("data", None)),
+                3: NamedSharding(mesh, P("data", None, None)),
+            }
+        else:
+            self._plan_sh = None
         # p_bucket is static: the full-width device table mirror is
         # narrowed to the step's page bucket INSIDE the jit (free), so
         # the host never slices/re-uploads tables per step
@@ -100,20 +125,33 @@ class Executor:
         device boundary — the (S·(K+1), V) logits never do."""
         tables = kv.device_tables(plan.slot_seqs, plan.p_bucket)
         ks, vs = kv.take_kv()
+        op = self._place
         try:
             next_tokens, bad, ks, vs = self._step(
                 plan.p_bucket, ks, vs,
-                jnp.asarray(plan.tokens), jnp.asarray(plan.seg_ids),
-                jnp.asarray(plan.positions), jnp.asarray(plan.write_idx),
-                tables, jnp.asarray(plan.sample_idx),
-                jnp.asarray(plan.sample_pos), jnp.asarray(plan.temps),
-                jnp.asarray(plan.top_ks), jnp.asarray(plan.top_ps),
-                jnp.asarray(plan.seeds))
+                op(plan.tokens), op(plan.seg_ids),
+                op(plan.positions), op(plan.write_idx),
+                tables, op(plan.sample_idx),
+                op(plan.sample_pos), op(plan.temps),
+                op(plan.top_ks), op(plan.top_ps),
+                op(plan.seeds))
         finally:
             if ks is not None:
                 kv.put_kv(ks, vs)
         self._compiled.add((plan.t_bucket, plan.p_bucket))
         return np.asarray(next_tokens), np.asarray(bad)
+
+    def _place(self, a) -> jnp.ndarray:
+        """Plan operands under a mesh get an explicit replica-axis
+        placement (row r → replica r's devices); otherwise asarray —
+        stable input shardings keep the jit cache at one entry per
+        shape bucket."""
+        if self._plan_sh is not None:
+            a = np.asarray(a)
+            sh = self._plan_sh.get(a.ndim)
+            if sh is not None:
+                return jax.device_put(a, sh)
+        return jnp.asarray(a)
 
     # -- the jitted data plane -------------------------------------------
     def _unified_step(self, p_bucket: int, k_pages: List[jnp.ndarray],
@@ -126,17 +164,85 @@ class Executor:
                       seeds: jnp.ndarray
                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                  List[jnp.ndarray], List[jnp.ndarray]]:
-        """tokens/seg_ids/positions/write_idx: (T,); tables: (S, W>=P)
-        full-width block-table mirror, narrowed here to the static
-        ``p_bucket``; sample_idx: (S, K+1) token-batch rows to sample;
-        sample_pos/temps/top_ks/top_ps/seeds: (S,) per-slot sampling
-        state (operands, never statics — per-request params cannot
-        trigger a recompile).  Returns ((S, K+1) sampled int32 tokens,
-        (S,) non-finite-logits flags, new K/V page arrays)."""
+        """Single replica: tokens/seg_ids/positions/write_idx (T,),
+        tables (S, W>=P), sample_idx (S, K+1), sample_pos/temps/top_ks/
+        top_ps/seeds (S,) — all operands, never statics (per-request
+        params cannot trigger a recompile).  With R data replicas every
+        plan operand grows a leading replica axis ((R, T), (R, S, K+1),
+        (R, S)) and the transformer body vmaps over it — replica r runs
+        the single-device step against its OWN slice of the page pool
+        ((R, N/R, ps, Hkv, hd) view) and its own S-row table block, so
+        per-replica bucket shapes (and the compiled-variant count) are
+        IDENTICAL to the single-device plan.  Under a mesh GSPMD then
+        partitions the vmapped program over ``data``/``model``.
+        Returns ((R*S, K+1) sampled int32 tokens, (R*S,) non-finite-
+        logits flags, new K/V page arrays)."""
+        cfg = self.cfg
+        replicated = tokens.ndim == 2
+        if not replicated:
+            x, new_k, new_v = self._body(
+                k_pages, v_pages, tokens, seg_ids, positions, write_idx,
+                tables[:, :p_bucket])
+            s, kp1 = sample_idx.shape
+            xs = jnp.take(x, sample_idx.reshape(-1), axis=0)  # (S*(K+1), D)
+        else:
+            r = tokens.shape[0]
+            n_total, ps = k_pages[0].shape[0], k_pages[0].shape[1]
+            n_local = n_total // r
+            k_r = [a.reshape(r, n_local, *a.shape[1:]) for a in k_pages]
+            v_r = [a.reshape(r, n_local, *a.shape[1:]) for a in v_pages]
+            tab_r = tables.reshape(r, tables.shape[0] // r,
+                                   tables.shape[1])[:, :, :p_bucket]
+            x, new_k, new_v = jax.vmap(self._body)(
+                k_r, v_r, tokens, seg_ids, positions, write_idx, tab_r)
+            new_k = [a.reshape(n_total, *a.shape[2:]) for a in new_k]
+            new_v = [a.reshape(n_total, *a.shape[2:]) for a in new_v]
+            if self._kv_sharding is not None:
+                cons = jax.lax.with_sharding_constraint
+                new_k = [cons(a, self._kv_sharding) for a in new_k]
+                new_v = [cons(a, self._kv_sharding) for a in new_v]
+            _, s_r, kp1 = sample_idx.shape
+            s = r * s_r
+            # per-replica row gather out of (R, T, D) hidden states,
+            # then flatten: the sampling tail below is replica-oblivious
+            xs = jax.vmap(lambda xr, ir: jnp.take(xr, ir, axis=0))(
+                x, sample_idx.reshape(r, -1)).reshape(s * kp1, -1)
+            sample_pos = sample_pos.reshape(-1)
+            temps = temps.reshape(-1)
+            top_ks = top_ks.reshape(-1)
+            top_ps = top_ps.reshape(-1)
+            seeds = seeds.reshape(-1)
+        logits = xs @ (self.params["embed"].T if cfg.tie_embeddings
+                       else self.params["lm_head"])
+        # per-slot fault barrier: a NaN/inf logits row (poisoned KV,
+        # overflowed activations) flags JUST that slot — the engine
+        # quarantines the one request instead of crashing the step loop
+        bad = jnp.any(~jnp.all(jnp.isfinite(logits), axis=-1)
+                      .reshape(s, kp1), axis=-1)
+        # sample IN-JIT: row i of a slot draws the token at absolute
+        # position sample_pos + i under that slot's params — the PRNG
+        # key depends only on (seed, position), which is what makes the
+        # speculative targets bitwise-equal to a non-speculative replay
+        gen_pos = (sample_pos[:, None]
+                   + jnp.arange(kp1, dtype=jnp.int32)[None, :])
+        toks = sampling.sample_tokens(
+            logits, jnp.repeat(temps, kp1), jnp.repeat(top_ks, kp1),
+            jnp.repeat(top_ps, kp1), jnp.repeat(seeds, kp1),
+            gen_pos.reshape(-1))
+        return toks.reshape(s, kp1), bad, new_k, new_v
+
+    def _body(self, k_pages: List[jnp.ndarray], v_pages: List[jnp.ndarray],
+              tokens: jnp.ndarray, seg_ids: jnp.ndarray,
+              positions: jnp.ndarray, write_idx: jnp.ndarray,
+              tables: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, List[jnp.ndarray], List[jnp.ndarray]]:
+        """One replica's transformer pass over its (n, ps, Hkv, hd) page
+        slice: embed → layers (KV scatter + paged attention in place) →
+        final norm.  Returns the (T, D) normed hidden states and the
+        updated page arrays; write_idx/tables are replica-LOCAL."""
         cfg = self.cfg
         t = tokens.shape[0]
         n_pages, ps = k_pages[0].shape[0], k_pages[0].shape[1]
-        tables = tables[:, :p_bucket]
         scale = cfg.query_scale or cfg.hd ** -0.5
 
         x = jnp.take(self.params["embed"], tokens, axis=0)     # (T, D)
@@ -173,7 +279,7 @@ class Executor:
             # (includes this step's writes; no per-slot gather)
             o = paged_attention(q.astype(kp.dtype), kp, vp, tables,
                                 seg_ids, positions, scale=scale,
-                                backend=cfg.attn_backend)
+                                backend=self._attn_backend)
             x = x + o.reshape(t, -1).astype(x.dtype) @ lp["attn"]["wo"]
             if "mlp" in lp:
                 h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps,
@@ -186,23 +292,4 @@ class Executor:
                        cfg.norm_offset) if cfg.norm == "rms" else \
             L.layer_norm(x, self.params["final_norm"],
                          self.params.get("final_norm_b"), cfg.norm_eps)
-        s, kp1 = sample_idx.shape
-        xs = jnp.take(x, sample_idx.reshape(-1), axis=0)  # (S*(K+1), D)
-        logits = xs @ (self.params["embed"].T if cfg.tie_embeddings
-                       else self.params["lm_head"])
-        # per-slot fault barrier: a NaN/inf logits row (poisoned KV,
-        # overflowed activations) flags JUST that slot — the engine
-        # quarantines the one request instead of crashing the step loop
-        bad = jnp.any(~jnp.all(jnp.isfinite(logits), axis=-1)
-                      .reshape(s, kp1), axis=-1)
-        # sample IN-JIT: row i of a slot draws the token at absolute
-        # position sample_pos + i under that slot's params — the PRNG
-        # key depends only on (seed, position), which is what makes the
-        # speculative targets bitwise-equal to a non-speculative replay
-        gen_pos = (sample_pos[:, None]
-                   + jnp.arange(kp1, dtype=jnp.int32)[None, :])
-        toks = sampling.sample_tokens(
-            logits, jnp.repeat(temps, kp1), jnp.repeat(top_ks, kp1),
-            jnp.repeat(top_ps, kp1), jnp.repeat(seeds, kp1),
-            gen_pos.reshape(-1))
-        return toks.reshape(s, kp1), bad, new_k, new_v
+        return x, new_k, new_v

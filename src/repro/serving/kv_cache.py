@@ -74,16 +74,22 @@ def _scatter_rows(mirror: jnp.ndarray, idx: jnp.ndarray,
         return _scatter_rows_jit(mirror, idx, rows)
 
 
-def _warm_scatter_variants(s: int, width: int) -> None:
+def _warm_scatter_variants(s: int, width: int, scatter=None,
+                           sharding=None) -> None:
     """Compile every pow2-padded ``_scatter_rows`` variant for an
     (s, width) mirror up front — a one-time server-startup cost, so no
-    delta flush ever compiles on the serving hot path."""
+    delta flush ever compiles on the serving hot path.  ``scatter`` /
+    ``sharding`` warm a mesh-placed mirror's dedicated executable (the
+    operand sharding is part of the jit cache key)."""
+    scatter = scatter or _scatter_rows
     n = 1
     while True:
         n_pad = min(n, s)
-        _scatter_rows(jnp.zeros((s, width), jnp.int32),
-                      jnp.full((n_pad,), s, jnp.int32),
-                      jnp.zeros((n_pad, width), jnp.int32))
+        mirror = jnp.zeros((s, width), jnp.int32)
+        if sharding is not None:
+            mirror = jax.device_put(mirror, sharding)
+        scatter(mirror, jnp.full((n_pad,), s, jnp.int32),
+                jnp.zeros((n_pad, width), jnp.int32))
         if n >= s:
             break
         n *= 2
@@ -107,10 +113,25 @@ class PageStats:
 
 class PagePool:
     """Refcounted free-list of physical page ids (one pool; per-stream
-    pools degenerate to one on a single serving stream)."""
+    pools degenerate to one on a single serving stream).
 
-    def __init__(self, num_pages: int):
+    With ``n_replicas > 1`` (data-parallel serving) page ids stay GLOBAL
+    but replica ``r`` owns the contiguous range
+    ``[r*pages_per_replica, (r+1)*pages_per_replica)`` — contiguity is
+    what lets the physical page arrays shard their page axis over the
+    ``data`` mesh axis with a plain ``NamedSharding``.  ``free`` remains
+    ONE flat list (watchdog/fault-injector/recovery code keeps working
+    on global ids); replica-targeted allocation scans it."""
+
+    def __init__(self, num_pages: int, n_replicas: int = 1):
+        if n_replicas < 1 or num_pages % n_replicas:
+            from .errors import MeshConfigError
+            raise MeshConfigError(
+                f"num_pages={num_pages} must divide across "
+                f"n_replicas={n_replicas}")
         self.num_pages = num_pages
+        self.n_replicas = n_replicas
+        self.pages_per_replica = num_pages // n_replicas
         self.free: List[int] = list(range(num_pages - 1, -1, -1))
         self.refs: Dict[int, int] = {}
         # content generation per page: bumped on every alloc, so prefix
@@ -122,17 +143,48 @@ class PagePool:
         # writer finishes)
         self.filled: Dict[int, int] = {}
         self.stats = PageStats()
+        # live-page high-water mark per replica (ROADMAP item 3 metric)
+        self.page_hwm_per_replica: List[int] = [0] * n_replicas
 
-    def alloc(self) -> Optional[int]:
-        if not self.free:
-            self.stats.oom_rejections += 1
-            return None
-        page = self.free.pop()
+    def replica_of(self, page: int) -> int:
+        return page // self.pages_per_replica
+
+    def free_in(self, replica: int) -> int:
+        """Free pages owned by ``replica`` (O(free); host-side only)."""
+        if self.n_replicas == 1:
+            return len(self.free)
+        return sum(1 for p in self.free
+                   if p // self.pages_per_replica == replica)
+
+    def _live_in(self, replica: int) -> int:
+        return self.pages_per_replica - self.free_in(replica)
+
+    def alloc(self, replica: Optional[int] = None) -> Optional[int]:
+        """Pop a free page — from ``replica``'s range when given, from
+        anywhere otherwise (``None`` keeps the pre-replica callers, e.g.
+        the fault injector's page stealer, working unchanged)."""
+        if replica is None or self.n_replicas == 1:
+            if not self.free:
+                self.stats.oom_rejections += 1
+                return None
+            page = self.free.pop()
+        else:
+            lo = replica * self.pages_per_replica
+            hi = lo + self.pages_per_replica
+            i = next((j for j in range(len(self.free) - 1, -1, -1)
+                      if lo <= self.free[j] < hi), None)
+            if i is None:
+                self.stats.oom_rejections += 1
+                return None
+            page = self.free.pop(i)
         self.refs[page] = 1
         self.gen[page] += 1
         self.filled[page] = 0
         self.stats.allocated_pages += 1
         self.stats.page_hwm = max(self.stats.page_hwm, len(self.refs))
+        r = self.replica_of(page)
+        self.page_hwm_per_replica[r] = max(self.page_hwm_per_replica[r],
+                                           self._live_in(r))
         return page
 
     def retain(self, page: int) -> None:
@@ -155,12 +207,18 @@ class PagedKVCache:
 
     def __init__(self, *, n_layers: int, n_kv_heads: int, head_dim: int,
                  page_size: int = 16, num_pages: int = 256,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, n_replicas: int = 1):
         self.n_layers = n_layers
         self.n_kv_heads = n_kv_heads
         self.head_dim = head_dim
         self.page_size = page_size
-        self.pool = PagePool(num_pages)
+        self.n_replicas = n_replicas
+        self.pool = PagePool(num_pages, n_replicas)
+        self.pages_per_replica = self.pool.pages_per_replica
+        # sequence id -> owning data replica (every page of a sequence
+        # lives in ONE replica's contiguous range; its block-table mirror
+        # row therefore holds replica-LOCAL page ids)
+        self.seq_replica: Dict[int, int] = {}
         shape = (num_pages, page_size, n_kv_heads, head_dim)
         self.k: Optional[List[jnp.ndarray]] = [
             jnp.zeros(shape, dtype) for _ in range(n_layers)]
@@ -190,20 +248,30 @@ class PagedKVCache:
         # fault injector's pool-exhaustion holds) — the watchdog and
         # ``reconcile`` count these as referenced
         self.external_refs: Dict[int, int] = {}
+        # mesh placement (``place_on_mesh``): NamedShardings for the
+        # page arrays and the table mirror, plus a scatter executable
+        # whose out_shardings pin the mirror's sharding so a dirty-row
+        # delta flush can never silently reshard the whole mirror
+        self._kv_sharding = None
+        self._mirror_sharding = None
+        self._scatter = _scatter_rows
 
     # -- sequence lifecycle ----------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
-    def can_admit(self, n_tokens: int) -> bool:
-        return self.pool.num_free >= self.pages_needed(n_tokens)
+    def can_admit(self, n_tokens: int, replica: int = 0) -> bool:
+        return self.pool.free_in(replica) >= self.pages_needed(n_tokens)
 
-    def create(self, seq_id: int, prompt_tokens: Sequence[int]) -> bool:
+    def create(self, seq_id: int, prompt_tokens: Sequence[int],
+               replica: int = 0) -> bool:
         """Admit a sequence; reuse shared-prefix pages where the page-
         aligned prompt hash matches (RadixAttention-style, page granular).
         ``lengths[seq_id]`` is set to the reused token count — the K/V of
         the remaining tokens is not in the pages yet.  Returns False when
-        out of pages (admission control)."""
+        out of pages (admission control).  ``replica`` pins every page
+        (and any prefix hit — sharing never crosses replicas) to that
+        data replica's contiguous page range."""
         assert seq_id not in self.tables
         n = len(prompt_tokens)
         table: List[int] = []
@@ -217,13 +285,14 @@ class PagedKVCache:
             hit = self._prefix_index.get(key) if full_page else None
             if (hit is not None and hit[0] in self.pool.refs
                     and self.pool.gen[hit[0]] == hit[1]
+                    and self.pool.replica_of(hit[0]) == replica
                     and reused * self.page_size == start):
                 self.pool.retain(hit[0])
                 table.append(hit[0])
                 reused += 1
                 self.pool.stats.prefix_hits += 1
                 continue
-            page = self.pool.alloc()
+            page = self.pool.alloc(replica)
             if page is None:
                 for p in table:
                     self.pool.release(p)
@@ -233,6 +302,7 @@ class PagedKVCache:
                 self._prefix_index[key] = (page, self.pool.gen[page])
             table.append(page)
         self.tables[seq_id] = table
+        self.seq_replica[seq_id] = replica
         # valid KV = the reused prefix, capped by what the sharers have
         # actually WRITTEN so far — a mid-prefill writer's pages are
         # claimed (page dedup) but their unwritten tail is re-computed by
@@ -260,12 +330,18 @@ class PagedKVCache:
                 break
         return total
 
+    def _alloc_for(self, seq_id: int) -> Optional[int]:
+        """Allocate a page in ``seq_id``'s owning replica (growth, COW,
+        speculative tails — a sequence's pages never cross replicas)."""
+        return self.pool.alloc(self.seq_replica.get(seq_id, 0))
+
     def free_seq(self, seq_id: int) -> None:
         for p in self.tables.pop(seq_id):
             self.pool.release(p)
         del self.lengths[seq_id]
         self.reused_prefix.pop(seq_id, None)
         self._seq_version.pop(seq_id, None)
+        self.seq_replica.pop(seq_id, None)
 
     # -- quarantine / recovery --------------------------------------------
     def quarantine_seq(self, seq_id: int) -> None:
@@ -278,6 +354,7 @@ class PagedKVCache:
         self.lengths.pop(seq_id, None)
         self.reused_prefix.pop(seq_id, None)
         self._seq_version.pop(seq_id, None)
+        self.seq_replica.pop(seq_id, None)
 
     def recover(self) -> int:
         """Force-rebuild allocator + mirror state from the surviving
@@ -331,6 +408,11 @@ class PagedKVCache:
         for layer in range(self.n_layers):
             self.k[layer] = self.k[layer].at[idx].set(0)
             self.v[layer] = self.v[layer].at[idx].set(0)
+        if self._kv_sharding is not None:
+            # eager scatters may drop the placement; re-pin so the next
+            # unified_step sees the SAME input shardings (no recompile)
+            self.k = [jax.device_put(a, self._kv_sharding) for a in self.k]
+            self.v = [jax.device_put(a, self._kv_sharding) for a in self.v]
 
     def ensure_capacity(self, seq_id: int, n_tokens: int) -> bool:
         """Grow the block table so ``n_tokens`` positions have pages.
@@ -340,7 +422,7 @@ class PagedKVCache:
         need = self.pages_needed(n_tokens)
         grown = []
         while len(table) < need:
-            page = self.pool.alloc()
+            page = self._alloc_for(seq_id)
             if page is None:
                 for p in grown:
                     self.pool.release(p)
@@ -413,7 +495,7 @@ class PagedKVCache:
         table = self.tables[seq_id]
         page = table[page_pos]
         if self.pool.refs.get(page, 1) > 1:
-            new_page = self.pool.alloc()
+            new_page = self._alloc_for(seq_id)
             if new_page is None:
                 return None
             for layer in range(self.n_layers):
@@ -439,7 +521,7 @@ class PagedKVCache:
         offset = pos % self.page_size
         table = self.tables[seq_id]
         if page_pos >= len(table):
-            page = self.pool.alloc()
+            page = self._alloc_for(seq_id)
             if page is None:
                 return False
             table.append(page)
@@ -539,13 +621,16 @@ class PagedKVCache:
             for i, sid in enumerate(seq_ids):
                 if sid < 0:
                     continue
-                t = self.tables[sid][:width]
+                t = self._local_row(sid, width)
                 out[i, : len(t)] = t
-            self._mirror = jnp.asarray(out)
+            self._mirror = (jnp.asarray(out)
+                            if self._mirror_sharding is None else
+                            jax.device_put(out, self._mirror_sharding))
             self._mirror_rows = list(targets)
             uploaded = s
             self.upload_full_rebuilds += 1
-            _warm_scatter_variants(s, width)
+            _warm_scatter_variants(s, width, self._scatter,
+                                   self._mirror_sharding)
         else:
             width = self._mirror.shape[1]
             dirty = [i for i, tgt in enumerate(targets)
@@ -563,16 +648,54 @@ class PagedKVCache:
                 for j, i in enumerate(dirty):
                     sid = seq_ids[i]
                     if sid >= 0:
-                        t = self.tables[sid][:width]
+                        t = self._local_row(sid, width)
                         rows[j, : len(t)] = t
                     idx[j] = i
                     self._mirror_rows[i] = targets[i]
-                self._mirror = _scatter_rows(
+                self._mirror = self._scatter(
                     self._mirror, jnp.asarray(idx), jnp.asarray(rows))
                 uploaded = n_pad
         self.last_upload_rows = uploaded
         self.upload_rows_total += uploaded
         return self._mirror
+
+    def _local_row(self, sid: int, width: int) -> List[int]:
+        """A sequence's block-table row in replica-LOCAL page ids — the
+        executor's per-replica KV shard is indexed [0, pages_per_replica)
+        so mirror rows subtract the owning replica's page-range offset.
+        With one replica the offset is 0 and ids are global (unchanged)."""
+        off = self.seq_replica.get(sid, 0) * self.pages_per_replica
+        t = self.tables[sid][:width]
+        return t if off == 0 else [p - off for p in t]
+
+    def place_on_mesh(self, kv_sharding, mirror_sharding) -> None:
+        """Pin the page pool and block-table mirror to a device mesh.
+
+        ``kv_sharding`` shards each per-layer (num_pages, page, kv, hd)
+        page array (page axis over ``data`` replicas, head axis over
+        ``model`` when it divides); ``mirror_sharding`` places the
+        (S, W) mirror.  The delta-upload scatter is re-jitted with an
+        explicit ``out_shardings=mirror_sharding`` so a dirty-row flush
+        can never reshard the mirror — the donation + delta-upload
+        invariant survives sharding.  Call once at engine construction,
+        before any ``device_tables``."""
+        self._kv_sharding = kv_sharding
+        self._mirror_sharding = mirror_sharding
+        scatter_jit = jax.jit(
+            lambda mirror, idx, rows: mirror.at[idx].set(rows, mode="drop"),
+            donate_argnums=(0,), out_shardings=mirror_sharding)
+
+        def scatter(mirror, idx, rows):
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                return scatter_jit(mirror, idx, rows)
+
+        self._scatter = scatter
+        if self.k is not None:
+            self.k = [jax.device_put(a, kv_sharding) for a in self.k]
+            self.v = [jax.device_put(a, kv_sharding) for a in self.v]
+        self._mirror = None            # next device_tables: placed rebuild
 
     def take_kv(self) -> Tuple[List[jnp.ndarray], List[jnp.ndarray]]:
         """Donation hook: hand the page arrays to the executor.  The host
@@ -620,7 +743,9 @@ class PagedKVCache:
             "pages_used": used,
             "pages_free": self.pool.num_free,
             "bytes_used": used * page_bytes,
+            "kv_bytes": self.pool.num_pages * page_bytes,
             "page_hwm": self.pool.stats.page_hwm,
+            "page_hwm_per_replica": list(self.pool.page_hwm_per_replica),
             "prefix_hit_rate": self.pool.stats.hit_rate,
             "cow_copies": self.pool.stats.cow_copies,
             "oom_rejections": self.pool.stats.oom_rejections,

@@ -26,6 +26,13 @@ Determinism contract (the replay anchor every test leans on):
     top-p cutoff value are all kept.  Deterministic, and identical
     between the in-jit path and the host reference used by the parity
     tests.
+
+Sharded serving note: under R data replicas the executor flattens the
+per-replica sampling operands to one (R·S·(K+1),) batch before calling
+``sample_tokens`` — the position-keyed PRNG makes this layout-oblivious
+(a slot's token depends on its own (seed, position), never on which
+replica row or mesh shape carried it), which is exactly why seeded
+outputs are bitwise-identical across mesh shapes.
 """
 
 from __future__ import annotations

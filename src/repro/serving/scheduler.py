@@ -56,7 +56,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .errors import (AdmissionRejected, BucketOverflow, PoolExhausted)
+from .errors import (AdmissionRejected, BucketOverflow, MeshConfigError,
+                     PoolExhausted)
 from .kv_cache import PagedKVCache
 from .sampling import SamplingParams
 from .spec import Proposer
@@ -141,19 +142,23 @@ class StepPlan:
     K = ``spec_k`` is fixed per engine, so every operand shape below is
     constant across steps (no bucket growth from speculation)."""
     spans: List[Span]
-    slot_seqs: List[int]         # slot -> seq id (-1 = empty slot)
-    tokens: np.ndarray           # (T,) int32, 0-padded
-    seg_ids: np.ndarray          # (T,) int32, -1 = padding
-    positions: np.ndarray        # (T,) int32
-    write_idx: np.ndarray        # (T,) int32 flat page slot, OOB = skip
-    sample_idx: np.ndarray       # (S, K+1) int32 token-batch rows
-    sample_pos: np.ndarray       # (S,) int32 index of first new token
-    temps: np.ndarray            # (S,) f32 per-slot temperature
-    top_ks: np.ndarray           # (S,) int32 per-slot top-k (0 = off)
-    top_ps: np.ndarray           # (S,) f32 per-slot top-p (1 = off)
-    seeds: np.ndarray            # (S,) uint32 per-slot PRNG seed
-    n_tokens: int                # live tokens before padding
-    t_bucket: int
+    slot_seqs: List[int]         # slot -> seq id (-1 = empty slot),
+                                 # length R*S; slot = replica*S + lane
+    tokens: np.ndarray           # (T,) int32, 0-padded   [R>1: (R, T)]
+    seg_ids: np.ndarray          # (T,) int32, -1 = padding; values are
+                                 # replica-LOCAL lanes     [R>1: (R, T)]
+    positions: np.ndarray        # (T,) int32              [R>1: (R, T)]
+    write_idx: np.ndarray        # (T,) int32 replica-local flat page
+                                 # slot, OOB = skip        [R>1: (R, T)]
+    sample_idx: np.ndarray       # (S, K+1) int32 replica-local token-
+                                 # batch rows           [R>1: (R, S, K+1)]
+    sample_pos: np.ndarray       # (S,) int32 first new token [R>1: (R, S)]
+    temps: np.ndarray            # (S,) f32 temperature      [R>1: (R, S)]
+    top_ks: np.ndarray           # (S,) int32 top-k (0 = off) [R>1: (R, S)]
+    top_ps: np.ndarray           # (S,) f32 top-p (1 = off)  [R>1: (R, S)]
+    seeds: np.ndarray            # (S,) uint32 PRNG seed     [R>1: (R, S)]
+    n_tokens: int                # live tokens before padding (all replicas)
+    t_bucket: int                # per-replica token width
     p_bucket: int
 
 
@@ -180,9 +185,19 @@ class Scheduler:
                  sampling: Optional[SamplingParams] = None,
                  spec_k: int = 0,
                  proposer: Optional[Proposer] = None,
+                 n_replicas: int = 1,
                  clock: Callable[[], float] = time.perf_counter):
         self.kv = kv
         self.max_batch = max_batch
+        if n_replicas < 1:
+            raise MeshConfigError(f"n_replicas must be >= 1, "
+                                  f"got {n_replicas}")
+        if getattr(kv, "n_replicas", 1) != n_replicas:
+            raise MeshConfigError(
+                f"scheduler n_replicas={n_replicas} but the KV cache was "
+                f"built with n_replicas={getattr(kv, 'n_replicas', 1)}")
+        self.n_replicas = n_replicas
+        self.total_slots = max_batch * n_replicas
         self.default_sampling = (sampling or SamplingParams()).validate()
         if spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {spec_k}")
@@ -190,9 +205,13 @@ class Scheduler:
         self.proposer = proposer
         self.chunk_size = chunk_size or int(
             os.environ.get("REPRO_PREFILL_CHUNK", "16"))
+        # token_budget and max_pages_per_seq are PER-REPLICA: each data
+        # replica plans its own (t_bucket,) token row against its own
+        # page range, so bucket shapes don't change with replica count
         budget = token_budget or max(2 * max_batch, self.chunk_size)
         self.token_budget = pow2_bucket(max(budget, max_batch), 1, 1 << 30)
-        self.max_pages_per_seq = max_pages_per_seq or kv.pool.num_pages
+        self.max_pages_per_seq = (max_pages_per_seq
+                                  or kv.pool.num_pages // n_replicas)
         self.min_t_bucket = min(min_t_bucket, self.token_budget)
         self.min_p_bucket = min(min_p_bucket,
                                 pow2_bucket(self.max_pages_per_seq, 1,
@@ -208,7 +227,9 @@ class Scheduler:
         self.running: Dict[int, Request] = {}
         self.done: Dict[int, Request] = {}    # terminal requests
         self.aborted: List[Request] = []      # CANCELLED/TIMED_OUT/FAILED
-        self.slots: List[int] = [-1] * max_batch      # slot -> seq id
+        # slot -> seq id; slot = replica * max_batch + lane (the lane is
+        # the executor's replica-local segment id)
+        self.slots: List[int] = [-1] * self.total_slots
         self._next_id = 0
         self.metrics = {
             "steps": 0, "prefills": 0, "decoded_tokens": 0,
@@ -274,23 +295,43 @@ class Scheduler:
         self.waiting.append(req)
         return req.req_id
 
-    def _free_slot(self) -> int:
-        for i, s in enumerate(self.slots):
-            if s < 0:
+    def _free_slot(self, replica: int) -> int:
+        lo = replica * self.max_batch
+        for i in range(lo, lo + self.max_batch):
+            if self.slots[i] < 0:
                 return i
         return -1
+
+    def _replica_of_slot(self, slot: int) -> int:
+        return slot // self.max_batch
+
+    def _candidate_replicas(self) -> List[int]:
+        """Replicas with a free lane, most free pages first (ties break
+        toward the lowest index so placement is deterministic)."""
+        cands = [r for r in range(self.n_replicas)
+                 if self._free_slot(r) >= 0]
+        cands.sort(key=lambda r: (-self.kv.pool.free_in(r), r))
+        return cands
 
     def _admit(self) -> None:
         # best-effort FIFO: a blocked request is BYPASSED by younger
         # ones that do fit — until it has waited ``aging_steps`` plans,
         # after which it holds the line (starvation-free aging; the
-        # admission that finally lands counts in ``aged_admissions``)
+        # admission that finally lands counts in ``aged_admissions``).
+        # With data replicas, each request lands on ONE replica (free
+        # lane + most free pages): its pages, lane, and token budget all
+        # come from that replica's share.
         i = 0
-        while i < len(self.waiting) and len(self.running) < self.max_batch:
+        while i < len(self.waiting) and len(self.running) < self.total_slots:
             req = self.waiting[i]
             hist = req.history
-            if not (self.kv.can_admit(len(hist) + 1)
-                    and self.kv.create(req.req_id, hist)):
+            replica = -1
+            for r in self._candidate_replicas():
+                if (self.kv.can_admit(len(hist) + 1, r)
+                        and self.kv.create(req.req_id, hist, r)):
+                    replica = r
+                    break
+            if replica < 0:
                 self.metrics["rejected_admissions"] += 1
                 if req.age_steps >= self.aging_steps:
                     break                # aged: nobody bypasses it
@@ -307,7 +348,7 @@ class Scheduler:
             req.computed = min(self.kv.lengths[req.req_id],
                                len(hist) - 1)
             req.created_len = len(hist)
-            req.slot = self._free_slot()
+            req.slot = self._free_slot(replica)
             self.slots[req.slot] = req.req_id
             self.running[req.req_id] = req
             req.state = (RequestState.DECODE if req.in_decode
@@ -423,7 +464,9 @@ class Scheduler:
             return None
 
         spans: List[Span] = []
-        budget = self.token_budget
+        # one token budget PER data replica: each replica fills its own
+        # (t_bucket,) row, so a busy replica can't starve another's
+        budget = [self.token_budget] * self.n_replicas
         # FIFO: req ids are issued in submit order and survive preemption,
         # so ascending id = oldest first (slot index does NOT track age —
         # a young request can land in a freed low slot)
@@ -431,20 +474,21 @@ class Scheduler:
                        key=lambda r: r.req_id)
         # decode spans first (liveliness); speculation widens them
         for req in order:
-            if not req.in_decode or budget <= 0:
+            rep = self._replica_of_slot(req.slot)
+            if not req.in_decode or budget[rep] <= 0:
                 continue
             drafts: List[int] = []
             if self.spec_k > 0 and self.proposer is not None:
                 cap = min(self.spec_k,
                           req.max_new_tokens - len(req.out_tokens) - 1,
-                          budget - 1)
+                          budget[rep] - 1)
                 if cap > 0:
                     drafts = list(
                         self.proposer.propose(req.history, cap))[:cap]
             span = self._reserve(req, req.computed + 1, drafts)
             if span is not None:
                 spans.append(span)
-                budget -= 1 + len(span.drafts)
+                budget[rep] -= 1 + len(span.drafts)
                 if span.drafts:
                     self.metrics["spec_steps"] += 1
                     self.metrics["proposed_tokens"] += len(span.drafts)
@@ -452,14 +496,15 @@ class Scheduler:
         for req in order:
             if req.req_id not in self.running or req.in_decode:
                 continue
-            if budget <= 0:
-                break
-            end = min(req.computed + min(self.chunk_size, budget),
+            rep = self._replica_of_slot(req.slot)
+            if budget[rep] <= 0:
+                continue
+            end = min(req.computed + min(self.chunk_size, budget[rep]),
                       len(req.history))
             span = self._reserve(req, end)
             if span is not None:
                 spans.append(span)
-                budget -= span.end - span.start
+                budget[rep] -= span.end - span.start
                 self.metrics["prefill_chunks"] += 1
 
         # liveliness: a STILL-decodable sequence (not OOM-preempted
@@ -501,61 +546,85 @@ class Scheduler:
                     decode=req.in_decode, drafts=list(drafts))
 
     def _pad(self, spans: List[Span]) -> StepPlan:
+        """Bucket-pad the step's spans into executor operands.  With
+        data replicas every token/sample array grows a leading replica
+        axis (R, ·): replica r's row holds ONLY its own spans, segment
+        ids are replica-LOCAL lanes, and write/sample indices are local
+        to the replica's page range / token row — the executor vmaps
+        one body over the axis, so per-replica shapes (and hence the
+        compiled bucket set) are IDENTICAL to the single-device plan.
+        R == 1 squeezes the axis away (bit-for-bit the old layout)."""
         kv = self.kv
+        R, S = self.n_replicas, self.max_batch
         n = sum(s.end - s.start + len(s.drafts) for s in spans)
-        t_bucket = pow2_bucket(n, self.min_t_bucket, self.token_budget)
+        counts = [0] * R
+        for s in spans:
+            counts[self._replica_of_slot(s.req.slot)] += \
+                s.end - s.start + len(s.drafts)
+        t_bucket = pow2_bucket(max(counts), self.min_t_bucket,
+                               self.token_budget)
         max_pages = max(len(kv.tables[s.req.req_id]) for s in spans)
         p_bucket = pow2_bucket(max_pages, self.min_p_bucket,
                                pow2_bucket(self.max_pages_per_seq,
                                            self.min_p_bucket, 1 << 30))
 
-        tokens = np.zeros(t_bucket, np.int32)
-        seg = np.full(t_bucket, -1, np.int32)
-        pos = np.zeros(t_bucket, np.int32)
-        oob = kv.pool.num_pages * kv.page_size
-        widx = np.full(t_bucket, oob, np.int32)
+        tokens = np.zeros((R, t_bucket), np.int32)
+        seg = np.full((R, t_bucket), -1, np.int32)
+        pos = np.zeros((R, t_bucket), np.int32)
+        oob = kv.pages_per_replica * kv.page_size    # replica-local OOB
+        widx = np.full((R, t_bucket), oob, np.int32)
         kp1 = self.spec_k + 1
-        sample_idx = np.zeros((self.max_batch, kp1), np.int32)
-        sample_pos = np.zeros(self.max_batch, np.int32)
-        temps = np.zeros(self.max_batch, np.float32)
-        top_ks = np.zeros(self.max_batch, np.int32)
-        top_ps = np.ones(self.max_batch, np.float32)
-        seeds = np.zeros(self.max_batch, np.uint32)
+        sample_idx = np.zeros((R, S, kp1), np.int32)
+        sample_pos = np.zeros((R, S), np.int32)
+        temps = np.zeros((R, S), np.float32)
+        top_ks = np.zeros((R, S), np.int32)
+        top_ps = np.ones((R, S), np.float32)
+        seeds = np.zeros((R, S), np.uint32)
 
-        cursor = 0
+        cursors = [0] * R
         for s in spans:
+            req_id = s.req.req_id
+            rep = self._replica_of_slot(s.req.slot)
+            lane = s.req.slot - rep * S
+            cursor = cursors[rep]
             hist = s.req.history
             m = s.end - s.start + len(s.drafts)
             sl = slice(cursor, cursor + m)
-            tokens[sl] = hist[s.start:s.end] + s.drafts
-            seg[sl] = s.req.slot
-            pos[sl] = np.arange(s.start, s.start + m)
+            tokens[rep, sl] = hist[s.start:s.end] + s.drafts
+            seg[rep, sl] = lane
+            pos[rep, sl] = np.arange(s.start, s.start + m)
             # reused-prefix tokens recomputed for logits keep their
             # already-valid K/V: skip the write (stays OOB)
-            wfrom = max(s.start, kv.lengths[s.req.req_id])
+            wfrom = max(s.start, kv.lengths[req_id])
             if s.start + m > wfrom:
-                widx[cursor + (wfrom - s.start): cursor + m] = \
-                    kv.flat_slots(s.req.req_id, wfrom, s.start + m)
+                off = (kv.seq_replica.get(req_id, 0)
+                       * kv.pages_per_replica * kv.page_size)
+                widx[rep, cursor + (wfrom - s.start): cursor + m] = \
+                    kv.flat_slots(req_id, wfrom, s.start + m) - off
             if s.sample:
                 # one sample row per new token: the pending token's row
                 # plus one per draft (rows of the last 1+len(drafts)
                 # fed tokens); unused tail entries repeat the last row
                 n_s = 1 + len(s.drafts)
                 rows = cursor + (m - n_s) + np.arange(n_s)
-                sample_idx[s.req.slot, :n_s] = rows
-                sample_idx[s.req.slot, n_s:] = rows[-1]
-                sample_pos[s.req.slot] = s.end
+                sample_idx[rep, lane, :n_s] = rows
+                sample_idx[rep, lane, n_s:] = rows[-1]
+                sample_pos[rep, lane] = s.end
                 sp = s.req.sampling
-                temps[s.req.slot] = sp.temperature
-                top_ks[s.req.slot] = sp.top_k
-                top_ps[s.req.slot] = sp.top_p
-                seeds[s.req.slot] = np.uint32(sp.seed & 0xFFFFFFFF)
-            cursor += m
+                temps[rep, lane] = sp.temperature
+                top_ks[rep, lane] = sp.top_k
+                top_ps[rep, lane] = sp.top_p
+                seeds[rep, lane] = np.uint32(sp.seed & 0xFFFFFFFF)
+            cursors[rep] += m
+        arrs = [tokens, seg, pos, widx, sample_idx, sample_pos,
+                temps, top_ks, top_ps, seeds]
+        if R == 1:
+            arrs = [a[0] for a in arrs]
         return StepPlan(spans=spans, slot_seqs=list(self.slots),
-                        tokens=tokens, seg_ids=seg, positions=pos,
-                        write_idx=widx, sample_idx=sample_idx,
-                        sample_pos=sample_pos, temps=temps,
-                        top_ks=top_ks, top_ps=top_ps, seeds=seeds,
+                        tokens=arrs[0], seg_ids=arrs[1], positions=arrs[2],
+                        write_idx=arrs[3], sample_idx=arrs[4],
+                        sample_pos=arrs[5], temps=arrs[6],
+                        top_ks=arrs[7], top_ps=arrs[8], seeds=arrs[9],
                         n_tokens=n, t_bucket=t_bucket, p_bucket=p_bucket)
 
     # -- step commit ------------------------------------------------------

@@ -1143,3 +1143,276 @@ class TestSpeculativeDecoding:
             if req.state is RequestState.FINISHED:
                 assert req.out_tokens == dense_rollout(
                     cfg, params, req.prompt, req.max_new_tokens)
+
+
+# ---------------------------------------------------------------------------
+# sharded serving: replicated slot space + device-mesh parity
+# ---------------------------------------------------------------------------
+
+class TestReplicatedSlotSpace:
+    """``n_replicas > 1`` without a mesh: the exact vmapped plan/step
+    layout the device mesh runs, on one device — the tier-1 parity seam
+    for the sharded serving data plane."""
+
+    def _run(self, n_replicas, n_requests=10, seed=0):
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=48,
+                            max_batch=4, n_replicas=n_replicas,
+                            chunk_size=8, token_budget=16)
+        rng = np.random.RandomState(seed)
+        ids = [eng.submit(list(rng.randint(1, 97, rng.randint(3, 12))),
+                          max_new_tokens=8) for _ in range(n_requests)]
+        fin = eng.run()
+        outs = {r.req_id: r.out_tokens for r in fin}
+        return [outs[i] for i in ids], eng
+
+    def test_replicated_outputs_match_single(self):
+        """S slots -> R*S slots changes WHICH step serves a request,
+        never WHAT it emits: greedy outputs are identical."""
+        o1, _ = self._run(1)
+        o2, e2 = self._run(2)
+        assert o1 == o2
+        assert e2.metrics["n_replicas"] == 2
+        # replication adds concurrency, not compiled variants
+        assert e2.metrics["bucket_compiles"] <= e2.bucket_count
+
+    def test_replicated_matches_dense_oracle(self):
+        outs, eng = self._run(2, n_requests=6, seed=7)
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        for req in eng.scheduler.done.values():
+            if req.state is RequestState.FINISHED:
+                assert req.out_tokens == dense_rollout(
+                    cfg, params, req.prompt, req.max_new_tokens)
+
+    def test_slot_space_scales_with_replicas(self):
+        """R=2 x max_batch=4 runs 8 requests CONCURRENTLY (the whole
+        point: aggregate throughput from replicated slot lanes)."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=64,
+                            max_batch=4, n_replicas=2, chunk_size=8,
+                            token_budget=16)
+        assert eng.scheduler.total_slots == 8
+        for i in range(8):
+            eng.submit([(i * 7 + j) % 97 for j in range(4)],
+                       max_new_tokens=8)
+        eng.step()
+        assert len(eng.running) == 8
+        lanes = {r.slot for r in eng.running.values()}
+        assert lanes == set(range(8))
+        eng.run()
+
+    def test_replica_page_isolation(self):
+        """A sequence's pages all come from its replica's contiguous
+        range — replicas never alias each other's KV."""
+        kv = PagedKVCache(n_layers=1, n_kv_heads=2, head_dim=4,
+                          page_size=4, num_pages=16, n_replicas=2)
+        kv.create(0, list(range(1, 10)), replica=0)
+        kv.create(1, list(range(1, 10)), replica=1)
+        assert all(p < 8 for p in kv.tables[0])
+        assert all(8 <= p < 16 for p in kv.tables[1])
+        # same-prompt prefix hit must NOT cross the replica boundary
+        assert kv.seq_replica == {0: 0, 1: 1}
+        assert set(kv.tables[0]).isdisjoint(kv.tables[1])
+        # growth allocs stay replica-pinned too
+        assert kv.ensure_capacity(1, 16)
+        assert all(8 <= p < 16 for p in kv.tables[1])
+        kv.free_seq(0)
+        kv.free_seq(1)
+        assert kv.pool.num_free == 16
+
+    def test_replica_oom_is_local(self):
+        """Replica 0 running dry rejects ITS admissions while replica 1
+        still admits — per-replica free accounting."""
+        kv = PagedKVCache(n_layers=1, n_kv_heads=2, head_dim=4,
+                          page_size=4, num_pages=8, n_replicas=2)
+        kv.create(0, list(range(1, 16)), replica=0)   # 4 pages: full
+        assert not kv.can_admit(4, replica=0)
+        assert kv.can_admit(4, replica=1)
+        assert kv.pool.free_in(0) == 0 and kv.pool.free_in(1) == 4
+
+    def test_refcount_conservation_replicated_with_cancels(self):
+        """The randomized conservation property holds with a replicated
+        slot space: allocated == freed + held at every step, per-replica
+        ranges never alias, and the pool drains."""
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=24,
+                            max_batch=3, n_replicas=2, chunk_size=4,
+                            token_budget=8)
+        ppr = eng.kv.pages_per_replica
+        rng = random.Random(97531)
+        ids = []
+        for step in range(300):
+            if len(ids) < 14 and rng.random() < 0.4:
+                n = rng.randint(1, 14)
+                base = rng.choice([0, 40])       # some shared prefixes
+                ids.append(eng.submit([(base + j) % 97 for j in range(n)],
+                                      max_new_tokens=rng.randint(1, 5)))
+            if ids and rng.random() < 0.15:
+                eng.cancel(rng.choice(ids))      # may be terminal: False
+            eng.step()
+            st = eng.kv.pool.stats
+            held = len(eng.kv.pool.refs)
+            assert st.allocated_pages == st.freed_pages + held
+            assert held + eng.kv.pool.num_free == eng.kv.pool.num_pages
+            for sid, table in eng.kv.tables.items():
+                rep = eng.kv.seq_replica[sid]
+                assert all(rep * ppr <= p < (rep + 1) * ppr
+                           for p in table)
+            if len(ids) >= 14 and not eng.waiting and not eng.running:
+                break
+        eng.run()
+        assert len(eng.scheduler.done) == 14     # all terminal
+        st = eng.kv.pool.stats
+        assert st.allocated_pages == st.freed_pages
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+    def test_kv_bytes_and_per_replica_hwm_metrics(self):
+        _, eng = self._run(2, n_requests=6)
+        m = eng.metrics
+        kv = eng.kv
+        # page_size * n_kv * hd * (k+v) * itemsize(f32) * layers
+        page_bytes = (kv.page_size * kv.n_kv_heads * kv.head_dim
+                      * 2 * 4 * kv.n_layers)
+        assert m["kv_bytes"] == kv.pool.num_pages * page_bytes
+        assert len(m["page_hwm_per_replica"]) == 2
+        assert all(h > 0 for h in m["page_hwm_per_replica"])
+        assert max(m["page_hwm_per_replica"]) <= eng.kv.pages_per_replica
+        assert m["page_hwm"] <= sum(m["page_hwm_per_replica"])
+
+    def test_scheduler_kv_replica_mismatch_raises(self):
+        from repro.serving.errors import MeshConfigError
+        from repro.serving.scheduler import Scheduler
+        kv = PagedKVCache(n_layers=1, n_kv_heads=2, head_dim=4,
+                          page_size=4, num_pages=8, n_replicas=1)
+        with pytest.raises(MeshConfigError):
+            Scheduler(kv, max_batch=2, n_replicas=2)
+
+    def test_pool_replica_divisibility_raises(self):
+        from repro.serving.errors import MeshConfigError
+        with pytest.raises(MeshConfigError):
+            PagePool(10, n_replicas=4)
+
+    def test_mesh_for_serving_validation(self):
+        from repro.launch.mesh import mesh_for_serving
+        from repro.serving.errors import MeshConfigError
+        n = len(jax.devices())
+        mesh = mesh_for_serving(n, tp=1)
+        assert dict(mesh.shape) == {"data": n, "model": 1}
+        with pytest.raises(MeshConfigError):
+            mesh_for_serving(n + 1)              # more than exist
+        with pytest.raises(MeshConfigError):
+            mesh_for_serving(n, tp=n + 1)        # tp doesn't divide
+        with pytest.raises(MeshConfigError):
+            mesh_for_serving(0)
+
+    def test_select_paged_backend(self):
+        from repro.models.attention import select_paged_backend
+        assert select_paged_backend("pallas", sharded=False) == "pallas"
+        assert select_paged_backend("auto", sharded=False) == "auto"
+        assert select_paged_backend("pallas", sharded=True) == "ref"
+        assert select_paged_backend("ref", sharded=True) == "ref"
+
+
+class TestShardedParity:
+    """Device-mesh parity: the SAME seeded workload on (1,1)/(2,1)/
+    (1,2)/(2,2) meshes yields identical finished outputs.  Multi-device
+    shapes need forced host devices, so these run in subprocesses
+    (pattern from tests/test_checkpoint_distributed.py)."""
+
+    @staticmethod
+    def _run_subprocess(code, n_devices=4):
+        import os as _os
+        import subprocess as _sp
+        import sys as _sys
+        import textwrap as _tw
+        env = dict(_os.environ)
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                            f"{n_devices}")
+        env["PYTHONPATH"] = _os.path.join(
+            _os.path.dirname(__file__), "..", "src")
+        out = _sp.run([_sys.executable, "-c", _tw.dedent(code)],
+                      capture_output=True, text=True, env=env,
+                      timeout=540)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return out.stdout
+
+    @pytest.mark.slow
+    def test_mesh_shapes_identical_outputs(self):
+        out = self._run_subprocess("""
+            import numpy as np, jax
+            import jax.numpy as jnp
+            from repro.models.lm import LMConfig, init_params
+            from repro.serving.engine import ServingEngine
+            from repro.serving.sampling import SamplingParams
+
+            cfg = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                           n_kv_heads=2, d_ff=128, vocab_size=97,
+                           param_dtype=jnp.float32, remat="none",
+                           attn_backend="ref")
+            params = init_params(cfg, jax.random.key(0))
+
+            def run(shape):
+                mesh = (jax.make_mesh(shape, ("data", "model"))
+                        if shape else None)
+                eng = ServingEngine(
+                    cfg, params, page_size=4, num_pages=64, max_batch=4,
+                    mesh=mesh, chunk_size=8, token_budget=16,
+                    sampling=SamplingParams(temperature=0.8, top_k=20,
+                                            seed=42))
+                rng = np.random.RandomState(0)
+                ids = [eng.submit(
+                           list(rng.randint(1, 97, rng.randint(3, 12))),
+                           max_new_tokens=8) for _ in range(10)]
+                fin = eng.run()
+                outs = {r.req_id: r.out_tokens for r in fin}
+                assert len(outs) == 10
+                m = eng.metrics
+                assert m["bucket_compiles"] <= eng.bucket_count
+                return [outs[i] for i in ids]
+
+            base = run(None)
+            for shape in [(1, 1), (2, 1), (1, 2), (2, 2)]:
+                assert run(shape) == base, f"mesh {shape} diverged"
+            print("PARITY-OK")
+        """)
+        assert "PARITY-OK" in out
+
+    @pytest.mark.slow
+    def test_paged_attention_heads_sharded_matches_ref(self):
+        """kernel-vs-ref with KV heads sharded over ``model``: the
+        GSPMD-partitioned gather+softmax equals the single-device
+        oracle."""
+        out = self._run_subprocess("""
+            import numpy as np, jax
+            import jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.models.attention import paged_attention
+
+            T, H, KVH, HD = 16, 4, 2, 16
+            NP_, PS, S, W = 32, 4, 4, 8
+            k = jax.random.key(1)
+            ks = jax.random.split(k, 5)
+            q = jax.random.normal(ks[0], (T, H, HD), jnp.float32)
+            kp = jax.random.normal(ks[1], (NP_, PS, KVH, HD), jnp.float32)
+            vp = jax.random.normal(ks[2], (NP_, PS, KVH, HD), jnp.float32)
+            tables = jax.random.randint(ks[3], (S, W), 0, NP_, jnp.int32)
+            seg = jnp.asarray(np.arange(T) % S, jnp.int32)
+            pos = jnp.asarray(np.arange(T) // S * PS + 1, jnp.int32)
+
+            ref = paged_attention(q, kp, vp, tables, seg, pos,
+                                  backend="ref")
+
+            mesh = jax.make_mesh((1, 2), ("data", "model"))
+            kv_sh = NamedSharding(mesh, P(None, None, "model", None))
+            f = jax.jit(lambda *a: paged_attention(*a, backend="ref"))
+            got = f(q, jax.device_put(kp, kv_sh),
+                    jax.device_put(vp, kv_sh), tables, seg, pos)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       atol=1e-5, rtol=1e-5)
+            print("KERNEL-REF-OK")
+        """)
+        assert "KERNEL-REF-OK" in out
