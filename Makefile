@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast gradcheck conformance chaos bench-smoke bench lint docs
+.PHONY: test test-fast gradcheck conformance chaos bench-smoke bench lint docs traffic
 
 test:
 	$(PY) -m pytest -x -q
@@ -33,6 +33,14 @@ bench-smoke:
 
 bench:
 	$(PY) -m benchmarks.run
+
+# deterministic heavy-traffic gate: seeded Poisson arrivals + client
+# churn through the async front door on virtual time (exits nonzero on
+# any TRAFFIC_GATE violation — p99 TTFT ceiling, dropped tokens,
+# refcount leaks, stuck streams, recompile budget)
+traffic:
+	mkdir -p benchmarks/out
+	$(PY) benchmarks/bench_traffic.py --quick
 
 # documentation gates: README/docs snippets must RUN, public API must
 # carry docstrings (tools/check_docs.py)

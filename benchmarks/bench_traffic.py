@@ -1,0 +1,281 @@
+"""Deterministic heavy-traffic benchmark for the streaming front door.
+
+    PYTHONPATH=src python benchmarks/bench_traffic.py [--quick] [--json P]
+        [--seed S] [--rate R] [--requests N]
+
+Everything runs on VIRTUAL time: seeded Poisson arrivals
+(``random.expovariate``) and a fixed per-engine-step cost on the
+injectable ``FakeClock`` shared with the tier-1 tests
+(``tests/clockutil.py``).  The same seed therefore produces the same
+arrival trace, the same admission decisions, and bit-identical latency
+percentiles on every machine — a tail-latency benchmark CI can gate
+with hard ceilings instead of fuzz factors.
+
+Sections:
+  traffic/poisson — N requests arriving Poisson at ``--rate`` (virtual
+      req/s) with mixed prompt lengths, priorities, tenants and TTFT
+      deadlines, streamed through ``AsyncFrontend``: p50/p99 TTFT,
+      p50/p99 inter-token latency, decode throughput (tokens per
+      virtual second), shed + timed-out counts, recompiles vs the
+      shape-bucket budget.
+  traffic/churn   — the adversarial run: same arrivals plus seeded
+      client churn (server-side cancels + consumer disconnects
+      mid-decode).  Gates: KV refcount conservation
+      (allocated == freed + held) after the drain, ZERO dropped tokens
+      on cancelled streams, zero stuck streams, every stream exactly
+      one terminal event.
+
+JSON (``--json``, default benchmarks/out/traffic.json) carries the
+``TRAFFIC_GATE`` fields consumed by the CI ``traffic-gate`` job.
+"""
+
+import argparse
+import asyncio
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from clockutil import FakeClock  # noqa: E402
+from repro.models.lm import LMConfig, init_params  # noqa: E402
+from repro.serving.engine import ServingEngine  # noqa: E402
+from repro.serving.errors import AdmissionRejected  # noqa: E402
+from repro.serving.frontend import AsyncFrontend  # noqa: E402
+
+if __package__ in (None, ""):
+    from common import emit, header, write_json  # noqa: E402
+else:
+    from .common import emit, header, write_json  # noqa: E402
+
+TRAFFIC_GATE = {}
+
+# Virtual cost of one engine step.  The value itself is arbitrary (it
+# cancels out of every ratio); what matters is that it is FIXED, so the
+# latency distribution is a pure function of (seed, workload, scheduler
+# policy) and regressions in admission ordering or prefill liveliness
+# move the gated percentiles deterministically.
+STEP_COST_S = 0.005
+# Hard ceilings for the gated run (seed 0, --quick workload).  The sim
+# is bit-deterministic, so these are behavioral regression tripwires
+# (2-3x headroom over measured), not noise allowances.
+P99_TTFT_CEILING_S = 0.40
+P99_ITL_CEILING_S = 0.08
+
+
+def pctl(xs, q):
+    """Nearest-rank percentile of a non-empty list (q in [0, 100])."""
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(q / 100 * (len(s) - 1))))]
+
+
+def bench_cfg():
+    return LMConfig(name="traffic", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_ff=128, vocab_size=97,
+                    param_dtype=jnp.float32, remat="none",
+                    attn_backend="ref")
+
+
+def build(clk, *, num_pages=96, max_batch=4):
+    cfg = bench_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    return ServingEngine(cfg, params, page_size=4, num_pages=num_pages,
+                         max_batch=max_batch, chunk_size=16, clock=clk)
+
+
+def make_workload(rng, n, rate_rps, vocab):
+    """Poisson arrival times + mixed request shapes (1 long : 3 short,
+    a quarter high-priority with TTFT deadlines, two tenants)."""
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += rng.expovariate(rate_rps)
+        long = i % 4 == 0
+        plen = 24 if long else rng.choice([4, 6, 8])
+        reqs.append({
+            "arrival": t,
+            "prompt": [rng.randrange(1, vocab - 1) for _ in range(plen)],
+            "max_new": 12 if long else rng.choice([4, 6, 8]),
+            "priority": 1 if i % 4 == 1 else 0,
+            "tenant": "a" if i % 3 else "b",
+            "ttft_deadline_ms": 2000.0 if i % 4 == 1 else None,
+        })
+    return reqs
+
+
+async def simulate(seed, n, rate_rps, *, churn=False):
+    """Drive the Poisson workload through the front door on virtual
+    time; returns (per-request records, frontend, engine)."""
+    rng = random.Random(seed)
+    clk = FakeClock()
+    eng = build(clk)
+    fe = AsyncFrontend(eng, hwm_frac=0.95, low_priority_hwm_frac=0.85,
+                       max_queue_depth=64)
+    work = make_workload(rng, n, rate_rps, bench_cfg().vocab_size)
+    recs = [{"arrival": w["arrival"], "token_times": [],
+             "terminal": None, "end": None} for w in work]
+    tasks = []
+
+    async def consume(i, w):
+        rec = recs[i]
+        try:
+            async for ev in fe.stream(
+                    w["prompt"], w["max_new"], priority=w["priority"],
+                    tenant=w["tenant"],
+                    ttft_deadline_ms=w["ttft_deadline_ms"]):
+                if ev.kind == "token":
+                    rec["token_times"].append(clk.t)
+                else:
+                    rec["terminal"] = ev.kind
+                    rec["end"] = clk.t
+        except AdmissionRejected:
+            rec["terminal"] = "shed"
+            rec["end"] = clk.t
+
+    crng = random.Random(seed + 1)
+    nxt = 0
+    for _ in range(200_000):                      # hard bound, never hit
+        while nxt < n and work[nxt]["arrival"] <= clk.t:
+            recs[nxt]["arrival"] = clk.t          # admission-quantized
+            tasks.append(asyncio.ensure_future(consume(nxt, work[nxt])))
+            nxt += 1
+        for _ in range(4):
+            await asyncio.sleep(0)                # let consumers run
+        if churn:
+            r = crng.random()
+            if r < 0.10 and eng.scheduler.running:
+                eng.cancel(crng.choice(list(eng.scheduler.running)))
+            elif r < 0.18 and tasks:
+                t = crng.choice(tasks)
+                if not t.done():
+                    t.cancel()                    # client disconnect
+        if nxt >= n and not fe.busy and all(t.done() for t in tasks):
+            break
+        fe.pump()
+        clk.advance(STEP_COST_S)
+        for _ in range(4):
+            await asyncio.sleep(0)
+    for t in tasks:
+        if not t.done():
+            t.cancel()
+        try:
+            await t
+        except asyncio.CancelledError:
+            pass
+    return recs, fe, eng
+
+
+def summarize(recs, fe, eng, section):
+    finished = [r for r in recs if r["terminal"] == "finished"]
+    ttfts = [r["token_times"][0] - r["arrival"]
+             for r in recs if r["token_times"]]
+    itls = [b - a for r in recs
+            for a, b in zip(r["token_times"], r["token_times"][1:])]
+    vtime = max((r["end"] for r in recs if r["end"] is not None),
+                default=STEP_COST_S)
+    m = eng.metrics
+    out = {
+        "finished": len(finished),
+        "shed": sum(r["terminal"] == "shed" for r in recs),
+        "timed_out": sum(r["terminal"] == "timed_out" for r in recs),
+        "cancelled": sum(r["terminal"] == "cancelled" for r in recs),
+        "no_terminal": sum(r["terminal"] is None for r in recs),
+        "p50_ttft_s": round(pctl(ttfts, 50), 4) if ttfts else None,
+        "p99_ttft_s": round(pctl(ttfts, 99), 4) if ttfts else None,
+        "p50_itl_s": round(pctl(itls, 50), 4) if itls else None,
+        "p99_itl_s": round(pctl(itls, 99), 4) if itls else None,
+        "decode_tok_per_vs": round(m["decoded_tokens"] / vtime, 1),
+        "tokens_streamed": fe.metrics["tokens_streamed"],
+        "tokens_dropped": fe.metrics["tokens_dropped"],
+        "ttft_deadline_misses": m["ttft_deadline_misses"],
+        "aged_admissions": m["aged_admissions"],
+        "backpressure_rejections": fe.metrics["backpressure_rejections"],
+        "bucket_compiles": m["bucket_compiles"],
+        "bucket_budget": eng.bucket_count,
+        "open_streams": len(fe._streams),
+        # engine-side liveness: anything still queued/running after the
+        # drain IS a stuck stream (client-side ``no_terminal`` is not —
+        # deliberately disconnected consumers never see a terminal)
+        "engine_inflight": len(eng.scheduler.waiting)
+        + len(eng.scheduler.running),
+    }
+    pool = eng.kv.pool
+    out["refcount_conserved"] = (
+        pool.stats.allocated_pages
+        == pool.stats.freed_pages + len(pool.refs))
+    out["pages_leaked"] = (pool.num_pages - pool.num_free
+                           - len(pool.refs))
+    emit(f"{section}/p99_ttft", out["p99_ttft_s"] or 0.0,
+         f"p50={out['p50_ttft_s']}s finished={out['finished']}", **out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized workload (the gated configuration)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rate", type=float, default=30.0,
+                    help="Poisson arrival rate, virtual req/s")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(__file__), "out", "traffic.json"))
+    args = ap.parse_args()
+    n = args.requests or (24 if args.quick else 64)
+
+    header()
+    recs, fe, eng = asyncio.run(simulate(args.seed, n, args.rate))
+    poisson = summarize(recs, fe, eng, "traffic/poisson")
+
+    recs, fe, eng = asyncio.run(
+        simulate(args.seed, n, args.rate, churn=True))
+    churn = summarize(recs, fe, eng, "traffic/churn")
+
+    TRAFFIC_GATE.update({
+        "seed": args.seed, "requests": n, "rate_rps": args.rate,
+        "step_cost_s": STEP_COST_S,
+        "p99_ttft_s": poisson["p99_ttft_s"],
+        "p99_ttft_ceiling_s": P99_TTFT_CEILING_S,
+        "p99_itl_s": poisson["p99_itl_s"],
+        "p99_itl_ceiling_s": P99_ITL_CEILING_S,
+        "ttft_deadline_misses": poisson["ttft_deadline_misses"],
+        "tokens_dropped": poisson["tokens_dropped"]
+        + churn["tokens_dropped"],
+        "churn_refcount_conserved": churn["refcount_conserved"],
+        "churn_pages_leaked": churn["pages_leaked"],
+        "churn_stuck_streams": churn["open_streams"]
+        + churn["engine_inflight"],
+        "churn_disconnects": churn["no_terminal"],
+        "churn_cancelled": churn["cancelled"],
+        "recompiles_within_budget":
+            poisson["bucket_compiles"] <= poisson["bucket_budget"]
+            and churn["bucket_compiles"] <= churn["bucket_budget"],
+    })
+    print("\n-- traffic gate --")
+    for k, v in TRAFFIC_GATE.items():
+        print(f"{k:>26}: {v}")
+
+    os.makedirs(os.path.dirname(args.json), exist_ok=True)
+    write_json(args.json, meta={
+        "bench": "traffic", "quick": args.quick,
+        "gate": TRAFFIC_GATE,
+        "poisson": poisson, "churn": churn,
+    })
+
+    ok = (poisson["p99_ttft_s"] is not None
+          and poisson["p99_ttft_s"] <= P99_TTFT_CEILING_S
+          and (poisson["p99_itl_s"] or 0.0) <= P99_ITL_CEILING_S
+          and TRAFFIC_GATE["tokens_dropped"] == 0
+          and churn["refcount_conserved"]
+          and churn["pages_leaked"] == 0
+          and TRAFFIC_GATE["churn_stuck_streams"] == 0
+          and TRAFFIC_GATE["recompiles_within_budget"])
+    print(f"[gate] {'PASS' if ok else 'FAIL'}")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -153,6 +153,7 @@ def main() -> None:
                              "page_hwm_per_replica", "kv_bytes",
                              "table_upload_rows", "prefix_hit_rate",
                              "cancellations", "timeouts",
+                             "ttft_deadline_misses",
                              "failed_requests", "watchdog_trips",
                              "aged_admissions", "executor_failures",
                              "steps_exhausted")},

@@ -4,13 +4,16 @@
 temperature / top-k / top-p), speculative-decoding proposers
 (``spec``), and the request-lifecycle fault-tolerance layer: typed
 ``errors``, the invariant ``watchdog``, and the deterministic
-``faults`` injection harness."""
+``faults`` injection harness.  The asyncio streaming front door
+(``frontend``) bridges per-token streams, mid-stream cancellation and
+watermark backpressure onto the engine loop."""
 
 from . import errors
 from .engine import ServingEngine
-from .errors import (AdmissionRejected, BucketOverflow,
-                     DeadlineExceeded, FaultInjected, PoolExhausted,
-                     RequestFailed, ServingError)
+from .errors import (AdmissionRejected, BackpressureRejected,
+                     BucketOverflow, DeadlineExceeded, FaultInjected,
+                     PoolExhausted, RequestFailed, ServingError)
+from .frontend import AsyncFrontend, StreamEvent
 from .executor import Executor
 from .faults import FaultInjector, FaultSpec
 from .kv_cache import PagedKVCache, PagePool
@@ -24,6 +27,7 @@ from .watchdog import Violation, Watchdog
 __all__ = ["ServingEngine", "LegacyServingEngine", "PagedKVCache",
            "PagePool", "Scheduler", "Executor", "Request", "StepPlan",
            "RequestState", "errors", "ServingError", "AdmissionRejected",
+           "BackpressureRejected", "AsyncFrontend", "StreamEvent",
            "PoolExhausted", "BucketOverflow", "DeadlineExceeded",
            "RequestFailed", "FaultInjected", "FaultInjector",
            "FaultSpec", "Watchdog", "Violation", "SamplingParams",

@@ -165,7 +165,8 @@ class ServingEngine:
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
                *, sampling: Optional[SamplingParams] = None,
                ttft_deadline_ms: Optional[float] = None,
-               timeout_ms: Optional[float] = None) -> int:
+               timeout_ms: Optional[float] = None,
+               priority: int = 0, tenant: str = "default") -> int:
         """Queue a request; returns its request id.  Admission happens
         lazily at the next step, when pages are available.  Raises
         :class:`~.errors.AdmissionRejected` (over-cap prompt, queue at
@@ -174,10 +175,16 @@ class ServingEngine:
         overrides the engine-wide :class:`SamplingParams` for this
         request only (per-request params are jit operands — no
         recompile).  ``ttft_deadline_ms`` / ``timeout_ms`` arm
-        per-request deadlines checked every step."""
+        per-request deadlines checked every step; the TTFT deadline is
+        also an admission *ordering* key (earliest-deadline-first
+        within a priority tier).  ``priority`` (higher admits first)
+        and ``tenant`` (fair-share accounting bucket) feed the
+        SLO-aware admission rank — all-default submissions keep plain
+        FIFO."""
         return self.scheduler.submit(
             prompt, max_new_tokens, sampling=sampling,
-            ttft_deadline_ms=ttft_deadline_ms, timeout_ms=timeout_ms)
+            ttft_deadline_ms=ttft_deadline_ms, timeout_ms=timeout_ms,
+            priority=priority, tenant=tenant)
 
     def cancel(self, req_id: int) -> bool:
         """Cancel a request at any point in its lifecycle — queued,
@@ -345,7 +352,9 @@ class ServingEngine:
         ``prefills``, ``prefill_chunks``, ``decoded_tokens``,
         ``preemptions``, ``zero_decode_steps``, ``cancellations``,
         ``timeouts``, ``failed_requests``, ``aged_admissions``,
-        ``rejected_admissions``, ``rejected_submits``; speculative
+        ``rejected_admissions``, ``rejected_submits``,
+        ``ttft_deadline_misses`` (requests whose first-token SLO
+        lapsed — the front door's gate signal); speculative
         decoding: ``spec_steps``, ``proposed_tokens``,
         ``accepted_tokens`` and the derived ``spec_acceptance_rate``
         (accepted / proposed — the first-class signal for how much

@@ -11,7 +11,9 @@ Hierarchy::
 
     ServingError
     ├── AdmissionRejected (ValueError)   submit-time rejection
-    │   └── PoolExhausted                page-watermark backpressure
+    │   ├── PoolExhausted                page-watermark backpressure
+    │   └── BackpressureRejected         front-door load shed (carries
+    │                                    retry_after_s → 503 Retry-After)
     ├── BucketOverflow (ValueError)      pow2 shape-bucket cap exceeded
     ├── MeshConfigError (ValueError)     invalid serving mesh shape
     ├── DeadlineExceeded                 ttft/timeout/step-cap expiry
@@ -24,8 +26,8 @@ from __future__ import annotations
 from typing import Optional
 
 __all__ = ["ServingError", "AdmissionRejected", "PoolExhausted",
-           "BucketOverflow", "MeshConfigError", "DeadlineExceeded",
-           "RequestFailed", "FaultInjected"]
+           "BackpressureRejected", "BucketOverflow", "MeshConfigError",
+           "DeadlineExceeded", "RequestFailed", "FaultInjected"]
 
 
 class ServingError(Exception):
@@ -41,6 +43,18 @@ class AdmissionRejected(ServingError, ValueError):
 class PoolExhausted(AdmissionRejected):
     """Admission gate: live pages are at/above the configured watermark
     of the pool — shed load now rather than wedge mid-decode later."""
+
+
+class BackpressureRejected(AdmissionRejected):
+    """Front-door load shed: the page pool (or request queue) is past
+    the admission watermark for this request's priority tier.  The
+    request holds no resources; ``retry_after_s`` tells the client how
+    long to back off (the HTTP layer maps this to a 503 response with a
+    ``Retry-After`` header)."""
+
+    def __init__(self, msg: str, retry_after_s: float = 1.0):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 class BucketOverflow(ServingError, ValueError):

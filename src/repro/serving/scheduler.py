@@ -28,9 +28,31 @@ Scheduling policy per step (``token_budget`` tokens total):
   1. decode spans first, one token per running decode-phase sequence —
      a step can never have 0 decode tokens while decodable sequences
      exist (liveliness; violations would bump ``zero_decode_steps``),
-  2. remaining budget goes to prefill chunks in FIFO admission order,
+  2. remaining budget goes to prefill chunks in admission order,
      ``chunk_size`` (env ``REPRO_PREFILL_CHUNK``) tokens max per request
      per step.
+
+Admission is SLO-aware, not plain FIFO.  Waiting requests are ranked
+by :meth:`Scheduler._admission_rank`:
+
+  1. **aged** requests first — a request that has waited
+     ``aging_steps`` plans stops being bypassed entirely (the
+     starvation guard; its landing counts in ``aged_admissions``),
+  2. **priority** tier (``submit(priority=...)``, higher first),
+  3. **TTFT-deadline slack** — earliest-deadline-first within a tier:
+     ``submitted_at + ttft_deadline_ms - now`` orders who must start
+     prefilling NOW to meet its first-token SLO (deadline-less
+     requests sort after every armed deadline),
+  4. **tenant fair-share** — among otherwise-equal requests the tenant
+     with the least tokens scheduled so far (``tenant_tokens``) goes
+     first, so one chatty tenant cannot monopolize admission,
+  5. submit order (``req_id``) — with default priority/tenant and no
+     deadlines the whole rank degenerates to classic FIFO, which is
+     what batch callers still get.
+
+A TTFT deadline is therefore an *ordering key* at admission time, not
+just an expiry check: ``ttft_deadline_misses`` counts the requests
+whose deadline still lapsed (the front door's SLO regression signal).
 
 Speculative decoding (``spec_k > 0`` + a ``spec.Proposer``) widens a
 decode span: the pending token plus up to ``spec_k`` host-proposed
@@ -102,6 +124,9 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     ttft_deadline_ms: Optional[float] = None   # first token due by
     timeout_ms: Optional[float] = None         # whole request due by
+    # SLO-aware admission
+    priority: int = 0            # higher = admitted earlier
+    tenant: str = "default"      # fair-share accounting bucket
     error: Optional[str] = None  # why a terminal state was reached
     last_advance_step: int = 0   # scheduler step of last cursor move
     age_steps: int = 0           # steps spent QUEUED (aging guard)
@@ -231,12 +256,16 @@ class Scheduler:
         # the executor's replica-local segment id)
         self.slots: List[int] = [-1] * self.total_slots
         self._next_id = 0
+        # tenant -> tokens scheduled (prompt at admission + emitted
+        # tokens at commit): the fair-share admission key
+        self.tenant_tokens: Dict[str, int] = {}
         self.metrics = {
             "steps": 0, "prefills": 0, "decoded_tokens": 0,
             "rejected_admissions": 0, "prefill_chunks": 0,
             "preemptions": 0, "zero_decode_steps": 0,
             "cancellations": 0, "timeouts": 0, "failed_requests": 0,
             "aged_admissions": 0, "rejected_submits": 0,
+            "ttft_deadline_misses": 0,
             "proposed_tokens": 0, "accepted_tokens": 0, "spec_steps": 0,
         }
 
@@ -265,7 +294,8 @@ class Scheduler:
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
                *, sampling: Optional[SamplingParams] = None,
                ttft_deadline_ms: Optional[float] = None,
-               timeout_ms: Optional[float] = None) -> int:
+               timeout_ms: Optional[float] = None,
+               priority: int = 0, tenant: str = "default") -> int:
         total = len(prompt) + max_new_tokens
         if self.kv.pages_needed(total) > self.max_pages_per_seq:
             self.metrics["rejected_submits"] += 1
@@ -290,7 +320,8 @@ class Scheduler:
                       sampling=(sampling or
                                 self.default_sampling).validate(),
                       ttft_deadline_ms=ttft_deadline_ms,
-                      timeout_ms=timeout_ms)
+                      timeout_ms=timeout_ms,
+                      priority=priority, tenant=tenant)
         self._next_id += 1
         self.waiting.append(req)
         return req.req_id
@@ -313,17 +344,34 @@ class Scheduler:
         cands.sort(key=lambda r: (-self.kv.pool.free_in(r), r))
         return cands
 
+    def _admission_rank(self, req: Request, now: float):
+        """SLO-aware admission key (smaller admits first): aged
+        requests hold the front, then priority tier (higher first),
+        then TTFT-deadline slack (earliest deadline first; no deadline
+        sorts last), then tenant fair-share (least tokens scheduled
+        first), then submit order.  All-default submissions reduce to
+        plain FIFO."""
+        slack = (float("inf") if req.ttft_deadline_ms is None
+                 else req.submitted_at + req.ttft_deadline_ms / 1e3 - now)
+        return (0 if req.age_steps >= self.aging_steps else 1,
+                -req.priority, slack,
+                self.tenant_tokens.get(req.tenant, 0), req.req_id)
+
     def _admit(self) -> None:
-        # best-effort FIFO: a blocked request is BYPASSED by younger
-        # ones that do fit — until it has waited ``aging_steps`` plans,
-        # after which it holds the line (starvation-free aging; the
-        # admission that finally lands counts in ``aged_admissions``).
-        # With data replicas, each request lands on ONE replica (free
-        # lane + most free pages): its pages, lane, and token budget all
-        # come from that replica's share.
-        i = 0
-        while i < len(self.waiting) and len(self.running) < self.total_slots:
-            req = self.waiting[i]
+        # best-effort ranked admission: a blocked request is BYPASSED
+        # by lower-ranked ones that do fit — until it has waited
+        # ``aging_steps`` plans, after which it ranks at the very front
+        # and holds the line (starvation-free aging; the admission that
+        # finally lands counts in ``aged_admissions``).  With data
+        # replicas, each request lands on ONE replica (free lane + most
+        # free pages): its pages, lane, and token budget all come from
+        # that replica's share.
+        now = self.clock()
+        order = sorted(self.waiting,
+                       key=lambda r: self._admission_rank(r, now))
+        for req in order:
+            if len(self.running) >= self.total_slots:
+                break
             hist = req.history
             replica = -1
             for r in self._candidate_replicas():
@@ -335,11 +383,12 @@ class Scheduler:
                 self.metrics["rejected_admissions"] += 1
                 if req.age_steps >= self.aging_steps:
                     break                # aged: nobody bypasses it
-                i += 1
                 continue
-            self.waiting.pop(i)
+            self.waiting.remove(req)
             if req.age_steps >= self.aging_steps:
                 self.metrics["aged_admissions"] += 1
+            self.tenant_tokens[req.tenant] = (
+                self.tenant_tokens.get(req.tenant, 0) + len(hist))
             # prefix reuse skips compute too — capped by what sharers
             # have actually written (kv.lengths) — but the LAST history
             # token is always recomputed: its logits seed the next
@@ -447,6 +496,7 @@ class Scheduler:
                     req.first_token_at is None and \
                     now > req.submitted_at + req.ttft_deadline_ms / 1e3:
                 late = f"ttft_deadline_ms={req.ttft_deadline_ms} missed"
+                self.metrics["ttft_deadline_misses"] += 1
             if late is not None:
                 self._retire(req, RequestState.TIMED_OUT, late)
                 self.metrics["timeouts"] += 1
@@ -467,11 +517,13 @@ class Scheduler:
         # one token budget PER data replica: each replica fills its own
         # (t_bucket,) row, so a busy replica can't starve another's
         budget = [self.token_budget] * self.n_replicas
-        # FIFO: req ids are issued in submit order and survive preemption,
-        # so ascending id = oldest first (slot index does NOT track age —
-        # a young request can land in a freed low slot)
+        # priority tier first, then FIFO: req ids are issued in submit
+        # order and survive preemption, so ascending id = oldest first
+        # (slot index does NOT track age — a young request can land in
+        # a freed low slot); a higher-priority request gets budget
+        # before an older lower-priority one
         order = sorted((self.running[s] for s in self.slots if s >= 0),
-                       key=lambda r: r.req_id)
+                       key=lambda r: (-r.priority, r.req_id))
         # decode spans first (liveliness); speculation widens them
         for req in order:
             rep = self._replica_of_slot(req.slot)
@@ -666,6 +718,8 @@ class Scheduler:
             take = min(j + 1, room)  # plan() caps drafts so take==j+1;
             toks = (s.drafts[:j] + [int(row[j])])[:take]
             req.out_tokens.extend(toks)
+            self.tenant_tokens[req.tenant] = (
+                self.tenant_tokens.get(req.tenant, 0) + len(toks))
             # accepted drafts were computed in-step; the correction
             # token was only SAMPLED — its compute runs next step
             req.computed = s.end + min(j, take)

@@ -1,0 +1,46 @@
+"""Deterministic fake-clock harness shared across tier-1 tests.
+
+Every deadline-bearing component in the serving stack (``Scheduler``,
+``ServingEngine``, and through them the front door) takes an injectable
+``clock`` callable.  :class:`FakeClock` is the test-side implementation:
+virtual seconds that only move when a test says so, so no tier-1 test
+ever sleeps on wall time and every deadline assertion is reproducible.
+
+Usage::
+
+    from clockutil import FakeClock
+
+    clk = FakeClock()
+    eng = ServingEngine(cfg, params, clock=clk, ...)
+    eng.submit(prompt, ttft_deadline_ms=50.0)
+    clk.advance(0.1)        # 100ms of virtual time
+    eng.step()              # deadline expiry is now observable
+
+(The tests directory is on ``sys.path`` via pytest's rootdir insertion;
+``benchmarks/bench_traffic.py`` imports this module the same way so the
+traffic simulator and the tests share one clock.)
+"""
+
+from __future__ import annotations
+
+__all__ = ["FakeClock"]
+
+
+class FakeClock:
+    """Deterministic virtual clock (seconds).  Call it like
+    ``time.monotonic``; move it with :meth:`advance`."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        """Advance virtual time by ``dt`` seconds; returns the new
+        time.  Negative ``dt`` is rejected — deadlines assume a
+        monotone clock."""
+        if dt < 0:
+            raise ValueError(f"clock must be monotone (dt={dt})")
+        self.t += dt
+        return self.t

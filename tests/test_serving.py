@@ -18,18 +18,7 @@ from repro.serving.kv_cache import PagedKVCache, PagePool
 from repro.serving.legacy import LegacyServingEngine
 from repro.serving.scheduler import RequestState, pow2_bucket
 
-
-class FakeClock:
-    """Deterministic clock for deadline tests (seconds)."""
-
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, dt):
-        self.t += dt
+from clockutil import FakeClock
 
 
 def tiny_cfg():
@@ -572,8 +561,10 @@ class TestDeadlines:
     def test_ttft_deadline_while_queued(self):
         clk, eng = self.make(max_batch=1)
         rid_hog = eng.submit([1, 2, 3, 4], max_new_tokens=30)
+        eng.step()                       # hog takes the only slot...
         rid = eng.submit([9, 8, 7], max_new_tokens=4,
                          ttft_deadline_ms=50)
+        # ...so EDF admission can't help the late arrival
         eng.step()
         eng.step()                       # hog holds the only slot
         clk.advance(0.1)
