@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast gradcheck conformance chaos bench-smoke bench lint docs traffic
+.PHONY: test test-fast gradcheck conformance chaos bench-smoke bench lint docs traffic quant
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +41,18 @@ bench:
 traffic:
 	mkdir -p benchmarks/out
 	$(PY) benchmarks/bench_traffic.py --quick
+
+# quantized-KV gate: the kernel parity tier (fp32/int8/fp8 vs the jnp
+# oracle), the pool-churn scale-alignment properties, the named
+# quality-drift gate, and the byte-budget-matched capacity sweep
+# (>= 2x concurrent sequences vs fp32 at the tier agreement floor)
+quant:
+	mkdir -p benchmarks/out
+	$(PY) -m pytest -x -q tests/test_quantization.py
+	$(PY) -m pytest -x -q tests/test_kernels.py -k "PagedAttention"
+	$(PY) -m pytest -x -q tests/test_serving.py -k "QuantizedPoolChurn"
+	$(PY) benchmarks/bench_serving.py --quick --quant-only \
+		--json benchmarks/out/serving-quant.json
 
 # documentation gates: README/docs snippets must RUN, public API must
 # carry docstrings (tools/check_docs.py)

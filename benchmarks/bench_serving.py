@@ -61,6 +61,16 @@ else:
 GATE = {}
 SPEC_GATE = {}
 SHARDED_GATE = {}
+QUANT_GATE = {}
+
+# Quantized-KV capacity gate: under a FIXED KV byte budget, an int8 /
+# fp8_e4m3 page pool (1-byte codes + per-token fp32 scales, ~3.2x
+# smaller pages) must sustain >= 2x the concurrent sequences of the
+# fp32 pool, while greedy outputs stay at or above the tier's
+# token-agreement floor vs the fp32 engine (the same floors
+# tests/test_quantization.py gates; see docs/kernels.md).
+QUANT_CONCURRENCY_FLOOR = 2.0
+QUANT_AGREEMENT_FLOOR = {"int8": 0.75, "fp8_e4m3": 0.5}
 
 # Mesh shapes for the sharded sweep: pure DP, pure TP, and mixed.
 SHARD_SHAPES = [(1, 1), (4, 1), (1, 4), (2, 4)]
@@ -297,6 +307,105 @@ def bench_spec_decode(quick: bool) -> None:
          tokens_per_s=round(tps_base, 1))
 
 
+def quant_workload(n: int = 32):
+    """Distinct 40-token prompts (content-shifted so the prefix cache
+    cannot dedup pages — the byte budget must be paid per sequence)."""
+    return [[(5 + 17 * i + j) % 251 for j in range(40)] for i in range(n)]
+
+
+def _serve_concurrent(eng, prompts, max_new: int = 8):
+    """Serve everything, tracking the running-sequence high-water mark
+    (the concurrency the pool actually sustained)."""
+    ids = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    hwm, finished = 0, []
+    while eng.waiting or eng.running:
+        finished.extend(eng.step())
+        hwm = max(hwm, len(eng.running))
+    assert len(finished) == len(ids), \
+        f"only {len(finished)}/{len(ids)} served"
+    return hwm, [eng.result(i).out_tokens for i in ids]
+
+
+def bench_quantized(quick: bool) -> None:
+    """The quantized capacity sweep: same model, same workload, same KV
+    byte budget — only the pool storage dtype varies.  The fp32 engine
+    is page-starved (8 sequences fit); the quantized pools must fit
+    >= 2x as many concurrently AND reproduce the fp32 tokens at the
+    tier floor."""
+    import time
+
+    from repro.serving.kv_cache import PagedKVCache
+
+    cfg = bench_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    page_size, pages_f32 = 8, 48
+
+    def page_bytes(kv_dtype):
+        # dtype mirrors the engine's fp32 pool (the cache ctor default
+        # is bf16, which would halve the baseline budget)
+        kv = PagedKVCache(n_layers=cfg.n_layers,
+                          n_kv_heads=cfg.n_kv_heads,
+                          head_dim=cfg.d_model // cfg.n_heads,
+                          page_size=page_size, num_pages=1,
+                          dtype=jnp.float32, kv_dtype=kv_dtype)
+        return kv.memory_stats()["page_bytes"]
+
+    budget = pages_f32 * page_bytes(None)
+    prompts = quant_workload(32)
+    t0 = time.perf_counter()
+    sweep, base_hwm, base_outs = {}, None, None
+    for kv_dtype in (None, "int8", "fp8_e4m3"):
+        num_pages = budget // page_bytes(kv_dtype)
+        eng = ServingEngine(cfg, params, page_size=page_size,
+                            num_pages=num_pages, max_batch=32,
+                            chunk_size=16, token_budget=64,
+                            max_pages_per_seq=6, kv_dtype=kv_dtype)
+        hwm, outs = _serve_concurrent(eng, prompts)
+        m = eng.metrics
+        stats = {
+            "num_pages": num_pages,
+            "page_bytes": page_bytes(kv_dtype),
+            "kv_bytes": m["kv_bytes"],
+            "kv_bytes_per_seq": m["kv_bytes_per_seq"],
+            "concurrent_seqs": hwm,
+            "recompiles": m["bucket_compiles"],
+            "bucket_count": eng.bucket_count,
+            "preemptions": m["preemptions"],
+        }
+        if kv_dtype is None:
+            base_hwm, base_outs = hwm, outs
+        else:
+            agree = sum(sum(a == b for a, b in zip(x, y))
+                        for x, y in zip(base_outs, outs))
+            total = sum(len(x) for x in base_outs)
+            stats.update({
+                "concurrency_vs_fp32": round(hwm / base_hwm, 2),
+                "token_agreement": round(agree / total, 4),
+                "agreement_floor": QUANT_AGREEMENT_FLOOR[kv_dtype],
+            })
+        sweep[kv_dtype or "fp32"] = stats
+    QUANT_GATE.update({
+        "byte_budget": budget,
+        "concurrency_floor": QUANT_CONCURRENCY_FLOOR,
+        "sweep": sweep,
+        "concurrency_ok": all(
+            s["concurrency_vs_fp32"] >= QUANT_CONCURRENCY_FLOOR
+            for k, s in sweep.items() if k != "fp32"),
+        "agreement_ok": all(
+            s["token_agreement"] >= s["agreement_floor"]
+            for k, s in sweep.items() if k != "fp32"),
+        "recompile_ok": all(s["recompiles"] <= s["bucket_count"]
+                            for s in sweep.values()),
+    })
+    i8 = sweep["int8"]
+    emit("serving/quantized", time.perf_counter() - t0,
+         f"int8 {i8['concurrent_seqs']} seqs "
+         f"({i8['concurrency_vs_fp32']:.1f}x fp32 @ same bytes); "
+         f"agreement={i8['token_agreement']:.2f}; "
+         f"fp8 {sweep['fp8_e4m3']['concurrency_vs_fp32']:.1f}x",
+         **QUANT_GATE)
+
+
 def bench_kernels() -> None:
     from repro.kernels import ops, ref
     q = jax.random.normal(jax.random.key(1), (1, 4, 256, 128))
@@ -427,22 +536,30 @@ def bench_sharded(quick: bool) -> None:
          **SHARDED_GATE)
 
 
-def run(quick: bool = True, json_path: str = None) -> None:
-    bench_engines(quick)
-    bench_spec_decode(quick)
-    if not quick:
-        bench_kernels()
-    bench_sharded(quick)
+def run(quick: bool = True, json_path: str = None,
+        quant_only: bool = False) -> None:
+    if not quant_only:
+        bench_engines(quick)
+        bench_spec_decode(quick)
+        if not quick:
+            bench_kernels()
+        bench_sharded(quick)
+    bench_quantized(quick)
     if json_path:
         write_json(json_path, meta={"bench": "serving", "quick": quick,
                                     "gate": GATE,
                                     "spec_gate": SPEC_GATE,
-                                    "sharded_gate": SHARDED_GATE})
+                                    "sharded_gate": SHARDED_GATE,
+                                    "quant_gate": QUANT_GATE})
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--quant-only", action="store_true",
+                    help="run only the quantized capacity sweep (the "
+                         "ci quant-gate job; other gate sections are "
+                         "left empty in the JSON)")
     ap.add_argument("--sharded-worker", action="store_true",
                     help="internal: run the mesh sweep in-process and "
                          "print SHARDED-JSON (requires forced devices)")
@@ -455,4 +572,5 @@ if __name__ == "__main__":
               flush=True)
         sys.exit(0)
     header()
-    run(quick=args.quick, json_path=args.json)
+    run(quick=args.quick, json_path=args.json,
+        quant_only=args.quant_only)

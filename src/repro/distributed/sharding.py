@@ -346,6 +346,17 @@ def serving_kv_spec(n_kv_heads: int, mesh: Mesh, *,
     return P(dat, None, None, None)
 
 
+def serving_kv_scale_spec(n_kv_heads: int, mesh: Mesh, *,
+                          pages_per_replica: int) -> P:
+    """Spec for a quantized pool's per-layer scale array
+    (num_pages_total, page_size, n_kv_heads) — the same placement as
+    :func:`serving_kv_spec` minus the head_dim axis, so every scale
+    row lives on the devices holding its page's codes."""
+    spec = serving_kv_spec(n_kv_heads, mesh,
+                           pages_per_replica=pages_per_replica)
+    return P(*spec[:3])
+
+
 def serving_mirror_spec(mesh: Mesh) -> P:
     """Block-table mirror (R*S, W): slot rows split over ``data`` —
     replica r's S rows land on its own devices, widths replicate."""

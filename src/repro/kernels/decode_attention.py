@@ -235,55 +235,85 @@ def mixed_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
       q, k_cache, v_cache)
 
 
-def _paged_kernel(tbl_ref, seg_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *,
-                  scale: float, window: Optional[int], page_size: int):
-    t = pl.program_id(0)
-    pi = pl.program_id(2)
-    np_ = pl.num_programs(2)
+def _paged_kernel(tbl_ref, seg_ref, pos_ref, q_ref, *refs,
+                  scale: float, window: Optional[int], page_size: int,
+                  ppt: int, quantized: bool):
+    # refs layout (set up by paged_attention_fwd): ppt K page refs,
+    # ppt V page refs, [ppt K-scale refs, ppt V-scale refs when
+    # quantized], then o_ref and the three VMEM scratch refs.
+    k_refs = refs[:ppt]
+    v_refs = refs[ppt:2 * ppt]
+    if quantized:
+        ks_refs = refs[2 * ppt:3 * ppt]
+        vs_refs = refs[3 * ppt:4 * ppt]
+        o_ref, m_scr, l_scr, acc_scr = refs[4 * ppt:]
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs[2 * ppt:]
 
-    @pl.when(pi == 0)
+    t = pl.program_id(0)
+    ti_ = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(ti_ == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     pos = pos_ref[t]
-    k_start = pi * page_size
-    # page pi of token t's sequence covers key positions
-    # [pi*ps, (pi+1)*ps); only pages at or before the token's own
-    # position hold live keys (causal).  Padding tokens (seg<0) route
-    # to page-table row 0 and the caller discards their output.
-    run = k_start <= pos
-    if window is not None:
-        run = jnp.logical_and(run, k_start + page_size > pos - window)
-
-    @pl.when(run)
-    def _body():
-        q = q_ref[0, 0]                               # (G, D)
-        k = k_ref[0, :, 0]                            # (ps, D)
-        v = v_ref[0, :, 0]
-        scores = pl.dot(q, k, trans_b=True).astype(jnp.float32) * scale
-
-        k_pos = k_start + jax.lax.broadcasted_iota(
-            jnp.int32, scores.shape, 1)
-        mask = k_pos <= pos
+    # the tile packs ppt consecutive pages of token t's sequence; each
+    # page j runs the SAME sequential online-softmax update the
+    # single-page grid would, in the same order — fp32 outputs are
+    # bitwise-equal for any tile size.  Only pages at or before the
+    # token's own position hold live keys (causal); a tile page past
+    # the table width is index-clamped in the BlockSpec map and its
+    # k_start > pos predicate skips the compute.  Padding tokens
+    # (seg<0) route to page-table row 0 and the caller discards their
+    # output.
+    for j in range(ppt):
+        k_start = (ti_ * ppt + j) * page_size
+        run = k_start <= pos
         if window is not None:
-            mask = jnp.logical_and(mask, k_pos > pos - window)
-        scores = jnp.where(mask, scores, NEG_INF)
+            run = jnp.logical_and(run,
+                                  k_start + page_size > pos - window)
 
-        m_prev = m_scr[:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
-        p = jnp.exp(scores - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_scr[...] = jnp.broadcast_to(
-            alpha * l_scr[:, :1] + jnp.sum(p, axis=-1, keepdims=True),
-            l_scr.shape)
-        acc_scr[...] = acc_scr[...] * alpha + pl.dot(
-            p.astype(v.dtype), v).astype(jnp.float32)
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        @pl.when(run)
+        def _body(j=j, k_start=k_start):
+            q = q_ref[0, 0]                           # (G, D)
+            k = k_refs[j][0, :, 0]                    # (ps, D)
+            v = v_refs[j][0, :, 0]
+            if quantized:
+                # dequantize IN KERNEL: codes × per-(token, head)
+                # scales — the fp32 pool never materializes in HBM
+                q = q.astype(jnp.float32)
+                k = k.astype(jnp.float32) \
+                    * ks_refs[j][0, :, 0][:, None]
+                v = v.astype(jnp.float32) \
+                    * vs_refs[j][0, :, 0][:, None]
+            scores = pl.dot(q, k, trans_b=True).astype(jnp.float32) \
+                * scale
 
-    @pl.when(pi == np_ - 1)
+            k_pos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, scores.shape, 1)
+            mask = k_pos <= pos
+            if window is not None:
+                mask = jnp.logical_and(mask, k_pos > pos - window)
+            scores = jnp.where(mask, scores, NEG_INF)
+
+            m_prev = m_scr[:, :1]
+            m_new = jnp.maximum(m_prev,
+                                jnp.max(scores, axis=-1, keepdims=True))
+            p = jnp.exp(scores - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_scr[...] = jnp.broadcast_to(
+                alpha * l_scr[:, :1]
+                + jnp.sum(p, axis=-1, keepdims=True),
+                l_scr.shape)
+            acc_scr[...] = acc_scr[...] * alpha + pl.dot(
+                p.astype(v.dtype), v).astype(jnp.float32)
+            m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ti_ == nt - 1)
     def _finalize():
         o_ref[0, 0] = (acc_scr[...]
                        / jnp.maximum(l_scr[:, :1], 1e-30)).astype(o_ref.dtype)
@@ -293,6 +323,9 @@ def paged_attention_fwd(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, tables: jnp.ndarray,
                         seg_ids: jnp.ndarray, positions: jnp.ndarray, *,
                         scale: float, window: Optional[int] = None,
+                        k_scale: Optional[jnp.ndarray] = None,
+                        v_scale: Optional[jnp.ndarray] = None,
+                        pages_per_tile: int = 1,
                         interpret: bool = False) -> jnp.ndarray:
     """q: (T, Hkv, G, D) — per-token query heads grouped by KV head;
     k_pages/v_pages: (N, ps, Hkv, D) — the PHYSICAL page pool, not a
@@ -301,29 +334,68 @@ def paged_attention_fwd(q: jnp.ndarray, k_pages: jnp.ndarray,
     scalar-prefetched: the KV BlockSpec index map reads
     ``tables[seg_ids[t], pi]`` before the body runs, so each grid step
     DMAs exactly one physical page into VMEM — the gather disappears
-    into the memory system.  Returns (T, Hkv, G, D)."""
+    into the memory system.
+
+    Quantized pools pass ``k_scale``/``v_scale``: (N, ps, Hkv) fp32
+    per-(token, head) scales.  They ride the SAME table-prefetch
+    routing as the pages — their BlockSpecs share the kv index map, so
+    the scale row for a page arrives with the page and dequantization
+    happens in VMEM, never materializing an fp32 pool.
+
+    ``pages_per_tile`` statically packs several pages into one grid
+    step (ppt K refs + ppt V refs resolved per-page in the index maps);
+    the kernel unrolls the identical per-page online-softmax update, so
+    fp32 outputs are BITWISE-equal across tile sizes while small-page
+    configs stop paying per-page grid overhead.  Returns (T, Hkv, G, D).
+    """
     t, hkv, g, d = q.shape
     n_pages, ps = k_pages.shape[0], k_pages.shape[1]
     s_slots, p_pages = tables.shape
+    ppt = max(1, min(pages_per_tile, p_pages))
+    n_tiles = pl.cdiv(p_pages, ppt)
+    quantized = k_scale is not None
 
     kernel = functools.partial(_paged_kernel, scale=scale, window=window,
-                               page_size=ps)
+                               page_size=ps, ppt=ppt,
+                               quantized=quantized)
 
-    def kv_map(ti, h, pi, tbl, seg, pos):
-        slot = jnp.clip(seg[ti], 0, s_slots - 1)
-        return (tbl[slot, pi], 0, h, 0)
+    def page_map(j):
+        def kv_map(ti, h, tj, tbl, seg, pos):
+            slot = jnp.clip(seg[ti], 0, s_slots - 1)
+            # pages past the table width clamp to the last column; the
+            # kernel's k_start <= pos predicate masks their compute
+            page = jnp.minimum(tj * ppt + j, p_pages - 1)
+            return (tbl[slot, page], 0, h, 0)
+        return kv_map
+
+    def scale_map(j):
+        def sc_map(ti, h, tj, tbl, seg, pos):
+            slot = jnp.clip(seg[ti], 0, s_slots - 1)
+            page = jnp.minimum(tj * ppt + j, p_pages - 1)
+            return (tbl[slot, page], 0, h)
+        return sc_map
+
+    in_specs = [pl.BlockSpec((1, 1, g, d),
+                             lambda ti, h, tj, tbl, seg, pos:
+                             (ti, h, 0, 0))]
+    in_specs += [pl.BlockSpec((1, ps, 1, d), page_map(j))
+                 for j in range(ppt)]
+    in_specs += [pl.BlockSpec((1, ps, 1, d), page_map(j))
+                 for j in range(ppt)]
+    operands = [q] + [k_pages] * ppt + [v_pages] * ppt
+    if quantized:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map(j))
+                     for j in range(ppt)]
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map(j))
+                     for j in range(ppt)]
+        operands += [k_scale] * ppt + [v_scale] * ppt
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(t, hkv, p_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda ti, h, pi, tbl, seg, pos: (ti, h, 0, 0)),
-            pl.BlockSpec((1, ps, 1, d), kv_map),
-            pl.BlockSpec((1, ps, 1, d), kv_map),
-        ],
+        grid=(t, hkv, n_tiles),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda ti, h, pi, tbl, seg, pos:
+                               lambda ti, h, tj, tbl, seg, pos:
                                (ti, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, 128), jnp.float32),
@@ -339,4 +411,4 @@ def paged_attention_fwd(q: jnp.ndarray, k_pages: jnp.ndarray,
         interpret=interpret,
         name="paged_attention_fwd",
     )(jnp.asarray(tables, jnp.int32), jnp.asarray(seg_ids, jnp.int32),
-      jnp.asarray(positions, jnp.int32), q, k_pages, v_pages)
+      jnp.asarray(positions, jnp.int32), *operands)

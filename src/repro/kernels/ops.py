@@ -147,29 +147,49 @@ def mixed_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
 # paged attention (serving unified step, block table on device)
 # ----------------------------------------------------------------------
 
+def default_pages_per_tile(page_size: int, p_pages: int) -> int:
+    """Static multi-page tile width: pack pages until a tile covers
+    ~DEFAULT_BLOCK_K key positions (capped at 8 refs to bound the
+    unrolled kernel body), so small-page configs don't pay one grid
+    step per page.  fp32 outputs are bitwise-identical across tile
+    sizes (the kernel unrolls the exact per-page update sequence)."""
+    from .decode_attention import DEFAULT_BLOCK_K
+    return max(1, min(8, DEFAULT_BLOCK_K // max(page_size, 1), p_pages))
+
+
 def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                     v_pages: jnp.ndarray, tables: jnp.ndarray,
                     seg_ids: jnp.ndarray, positions: jnp.ndarray,
                     scale: Optional[float] = None,
-                    window: Optional[int] = None) -> jnp.ndarray:
+                    window: Optional[int] = None,
+                    k_scale: Optional[jnp.ndarray] = None,
+                    v_scale: Optional[jnp.ndarray] = None,
+                    pages_per_tile: Optional[int] = None) -> jnp.ndarray:
     """q: (T, Hq, D) flat token batch vs the PHYSICAL page pool
     (N, ps, Hkv, D); tables (S, P), seg_ids/positions (T,) int32 ride as
     scalar-prefetch operands so the kernel's index maps resolve
-    slot -> page id before each body runs.  Inference-only (no vjp)."""
+    slot -> page id before each body runs.  A quantized pool (int8 /
+    fp8_e4m3 codes) passes (N, ps, Hkv) fp32 ``k_scale``/``v_scale``;
+    dequantization happens inside the kernel.  ``pages_per_tile``
+    (default: :func:`default_pages_per_tile`) packs several pages per
+    grid step.  Inference-only (no vjp)."""
     t, hq, d = q.shape
     _, ps, hkv, _ = k_pages.shape
     g = hq // hkv
     eff_scale = scale if scale is not None else d ** -0.5
+    if pages_per_tile is None:
+        pages_per_tile = default_pages_per_tile(ps, tables.shape[1])
 
     qg = _pad_last(q.reshape(t, hkv, g, d), LANE)
-    kp = _pad_last(k_pages, LANE)
+    kp = _pad_last(k_pages, LANE)         # zero codes: dequant to 0
     vp = _pad_last(v_pages, LANE)
 
     out = paged_attention_fwd(
         qg, kp, vp, jnp.asarray(tables, jnp.int32),
         jnp.asarray(seg_ids, jnp.int32),
         jnp.asarray(positions, jnp.int32), scale=eff_scale,
-        window=window, interpret=_interpret())
+        window=window, k_scale=k_scale, v_scale=v_scale,
+        pages_per_tile=pages_per_tile, interpret=_interpret())
     return out[..., :d].reshape(t, hq, d)
 
 

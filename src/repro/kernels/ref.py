@@ -37,12 +37,18 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                     v_pages: jnp.ndarray, tables: jnp.ndarray,
                     seg_ids: jnp.ndarray, positions: jnp.ndarray,
                     scale: Optional[float] = None,
-                    window: Optional[int] = None) -> jnp.ndarray:
+                    window: Optional[int] = None,
+                    k_scale: Optional[jnp.ndarray] = None,
+                    v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """q: (T, Hq, D) vs the physical page pool (N, ps, Hkv, D) via
     (S, P) block tables — gather-then-attend oracle for the Pallas
-    block-table-prefetching kernel."""
+    block-table-prefetching kernel.  For a quantized pool pass the
+    (N, ps, Hkv) fp32 ``k_scale``/``v_scale`` arrays: the oracle
+    dequantizes (codes × scales) before gathering, mirroring the
+    kernel's in-VMEM dequantization."""
     return _paged_ref(q, k_pages, v_pages, tables, seg_ids, positions,
-                      scale=scale, window=window, backend="ref")
+                      scale=scale, window=window, k_scale=k_scale,
+                      v_scale=v_scale, backend="ref")
 
 
 def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

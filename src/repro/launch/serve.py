@@ -65,6 +65,13 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--num-pages", type=int, default=256)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--kv-dtype", choices=["fp32", "int8", "fp8_e4m3"],
+                    default=None,
+                    help="KV page-pool storage; int8/fp8_e4m3 store "
+                         "quantized codes + per-token scales and "
+                         "dequantize in the attention kernel "
+                         "(~4x/~3.5x more concurrent sequences per "
+                         "KV byte; see docs/kernels.md)")
     ap.add_argument("--timeout-ms", type=float, default=None,
                     help="per-request total deadline")
     ap.add_argument("--ttft-deadline-ms", type=float, default=None,
@@ -99,6 +106,7 @@ def main() -> None:
                         max_batch=args.max_batch,
                         chunk_size=args.chunk,
                         max_queue_depth=args.max_queue_depth,
+                        kv_dtype=args.kv_dtype,
                         faults=faults, mesh=mesh)
 
     prompts = synthetic_workload(args.requests, cfg.vocab_size)
@@ -151,6 +159,7 @@ def main() -> None:
                              "preemptions", "zero_decode_steps",
                              "decoded_tokens", "page_hwm",
                              "page_hwm_per_replica", "kv_bytes",
+                             "kv_bytes_per_seq", "kv_dtype",
                              "table_upload_rows", "prefix_hit_rate",
                              "cancellations", "timeouts",
                              "ttft_deadline_misses",

@@ -205,6 +205,9 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                     seg_ids: jnp.ndarray, positions: jnp.ndarray,
                     scale: Optional[float] = None,
                     window: Optional[int] = None,
+                    k_scale: Optional[jnp.ndarray] = None,
+                    v_scale: Optional[jnp.ndarray] = None,
+                    pages_per_tile: Optional[int] = None,
                     backend: str = "auto") -> jnp.ndarray:
     """Mixed prefill/decode attention DIRECTLY over the physical KV page
     pool — no per-slot contiguous cache is materialized.
@@ -216,6 +219,15 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     (<0 = padding); positions: (T,) absolute position in the sequence.
     Token t attends slot seg_ids[t]'s pages at key positions <=
     positions[t].  Returns (T, Hq, D).
+
+    A QUANTIZED pool (int8 / fp8_e4m3 codes) passes ``k_scale``/
+    ``v_scale`` — (N, ps, Hkv) fp32 per-(token, head) scales stored
+    beside the pages (see ``serving.quant``).  The Pallas path
+    dequantizes inside the kernel (scales ride the same table-routed
+    BlockSpec path as their pages); the ref path dequantizes the pool
+    before its gather — same math, the tolerance oracle.
+    ``pages_per_tile`` statically packs several pages per kernel grid
+    step (fp32 output bitwise-independent of the tile size).
 
     Backends: "pallas" runs the block-table-prefetching kernel (the
     production TPU path: the table lookup happens in the BlockSpec index
@@ -236,11 +248,20 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
             from ..kernels import ops as kops
             return kops.paged_attention(q, k_pages, v_pages, tables,
                                         seg_ids, positions, scale=scale,
-                                        window=window)
+                                        window=window, k_scale=k_scale,
+                                        v_scale=v_scale,
+                                        pages_per_tile=pages_per_tile)
         except Exception:
             if backend == "pallas":
                 raise
 
+    if k_scale is not None:
+        # ref dequant: codes × scales materialize an fp32 pool view
+        # (oracle/CPU path only — the kernel path never does this)
+        k_pages = (k_pages.astype(jnp.float32)
+                   * k_scale[..., None]).astype(q.dtype)
+        v_pages = (v_pages.astype(jnp.float32)
+                   * v_scale[..., None]).astype(q.dtype)
     gidx = (tables[:, :, None] * ps
             + jnp.arange(ps)[None, None, :]).reshape(s, p * ps)
     return _paged_attention_ref(q, k_pages, v_pages, gidx, seg_ids,

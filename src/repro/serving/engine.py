@@ -86,6 +86,7 @@ class ServingEngine:
                  exec_failure_limit: int = 3,
                  faults: Optional[FaultInjector] = None,
                  mesh=None, n_replicas: int = 1,
+                 kv_dtype: Optional[str] = None,
                  clock: Callable[[], float] = time.perf_counter):
         for spec in cfg.pattern:
             if spec.mixer not in ("attn",):
@@ -120,21 +121,31 @@ class ServingEngine:
             proposer = NgramProposer()
         self.spec_k = spec_k
         self.proposer = proposer
+        # kv_dtype: None keeps the param-dtype pool (fp32/bf16 — the
+        # PR 9 default path, bit-identical); "int8"/"fp8_e4m3" store
+        # quantized codes + per-(token, head) fp32 scales and shrink
+        # KV bytes ~4×/~3.5× — concurrency is KV-byte-bound, so the
+        # same byte budget admits that many more sequences
         self.kv = PagedKVCache(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, page_size=page_size,
             num_pages=num_pages * n_replicas, n_replicas=n_replicas,
             dtype=jnp.float32 if cfg.param_dtype == jnp.float32
-            else jnp.bfloat16)
-        kv_sharding = None
+            else jnp.bfloat16, kv_dtype=kv_dtype)
+        kv_sharding = scale_sharding = None
         if mesh is not None:
             from jax.sharding import NamedSharding
-            from ..distributed.sharding import (serving_kv_spec,
+            from ..distributed.sharding import (serving_kv_scale_spec,
+                                                serving_kv_spec,
                                                 serving_mirror_spec)
             kv_sharding = NamedSharding(mesh, serving_kv_spec(
                 cfg.n_kv_heads, mesh, pages_per_replica=num_pages))
+            if self.kv.quant_mode is not None:
+                scale_sharding = NamedSharding(mesh, serving_kv_scale_spec(
+                    cfg.n_kv_heads, mesh, pages_per_replica=num_pages))
             self.kv.place_on_mesh(
-                kv_sharding, NamedSharding(mesh, serving_mirror_spec(mesh)))
+                kv_sharding, NamedSharding(mesh, serving_mirror_spec(mesh)),
+                scale_sharding)
         self.scheduler = Scheduler(
             self.kv, max_batch=max_batch, chunk_size=chunk_size,
             token_budget=token_budget,
@@ -148,7 +159,9 @@ class ServingEngine:
         self.kv.mirror_width_hint = self.scheduler.p_buckets()[-1]
         self.executor = Executor(cfg, params, mesh=mesh,
                                  n_replicas=n_replicas,
-                                 kv_sharding=kv_sharding)
+                                 kv_sharding=kv_sharding,
+                                 kv_quant=self.kv.quant_mode,
+                                 scale_sharding=scale_sharding)
         self.watchdog = Watchdog(interval=watchdog_interval,
                                  stall_steps=stall_steps)
         # fault injection: ctor arg, else env (None = zero overhead)
@@ -364,7 +377,12 @@ class ServingEngine:
         variants — must stay ≤ :attr:`bucket_count`), ``page_hwm``
         (live-page high-water mark), ``page_hwm_per_replica`` (same,
         per data replica), ``kv_bytes`` (total resident page-pool
-        bytes), ``n_replicas``, ``table_upload_rows`` (host→device
+        bytes — codes plus scale overhead for a quantized pool),
+        ``kv_dtype`` (the pool storage: "float32"/"bfloat16"/"int8"/
+        "fp8_e4m3"), ``kv_bytes_per_seq`` (resident bytes of one
+        max-length sequence: page bytes × ``max_pages_per_seq`` — the
+        capacity-planning number that shows the quantization win),
+        ``n_replicas``, ``table_upload_rows`` (host→device
         block-table rows flushed by the delta mirror), and
         ``table_full_rebuilds``."""
         m = dict(self.scheduler.metrics)
@@ -372,7 +390,11 @@ class ServingEngine:
         m["bucket_compiles"] = self.executor.compile_count
         m["page_hwm"] = self.kv.pool.stats.page_hwm
         m["page_hwm_per_replica"] = list(self.kv.pool.page_hwm_per_replica)
-        m["kv_bytes"] = self.kv.memory_stats()["kv_bytes"]
+        ms = self.kv.memory_stats()
+        m["kv_bytes"] = ms["kv_bytes"]
+        m["kv_dtype"] = ms["kv_dtype"]
+        m["kv_bytes_per_seq"] = (ms["page_bytes"]
+                                 * self.scheduler.max_pages_per_seq)
         m["n_replicas"] = self.n_replicas
         m["table_upload_rows"] = self.kv.upload_rows_total
         m["table_full_rebuilds"] = self.kv.upload_full_rebuilds

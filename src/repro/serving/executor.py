@@ -44,7 +44,7 @@ import numpy as np
 from ..models import layers as L
 from ..models.attention import paged_attention, select_paged_backend
 from ..models import lm as LM
-from . import sampling
+from . import quant, sampling
 from .kv_cache import PagedKVCache
 from .scheduler import StepPlan
 
@@ -71,8 +71,15 @@ class Executor:
     bookkeeping."""
 
     def __init__(self, cfg: LM.LMConfig, params, *, mesh=None,
-                 n_replicas: int = 1, kv_sharding=None):
+                 n_replicas: int = 1, kv_sharding=None,
+                 kv_quant=None, scale_sharding=None):
         self.cfg = cfg
+        # quantized KV: the step quantizes k/v per (token, head) right
+        # before the flat scatter (codes into the pool, scales into the
+        # parallel arrays at the SAME write_idx) and attention
+        # dequantizes in-kernel — None keeps the fp32/bf16 trace
+        # byte-identical to the unquantized executor
+        self._kv_quant = quant.canonical(kv_quant)
         self.mesh = mesh
         if mesh is not None:
             n_replicas = dict(mesh.shape).get("data", 1)
@@ -91,6 +98,7 @@ class Executor:
         # KV pages keep THIS sharding across steps: constrained on the
         # step outputs so donation round-trips never reshard
         self._kv_sharding = kv_sharding
+        self._scale_sharding = scale_sharding
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
             self._plan_sh = {
@@ -103,7 +111,7 @@ class Executor:
         # narrowed to the step's page bucket INSIDE the jit (free), so
         # the host never slices/re-uploads tables per step
         self._step = jax.jit(self._unified_step, static_argnums=(0,),
-                             donate_argnums=(1, 2))
+                             donate_argnums=(1, 2, 3, 4))
         self._compiled: set = set()
 
     @property
@@ -125,10 +133,11 @@ class Executor:
         device boundary — the (S·(K+1), V) logits never do."""
         tables = kv.device_tables(plan.slot_seqs, plan.p_bucket)
         ks, vs = kv.take_kv()
+        kss, vss = kv.take_scales()      # ([], []) unquantized
         op = self._place
         try:
-            next_tokens, bad, ks, vs = self._step(
-                plan.p_bucket, ks, vs,
+            next_tokens, bad, ks, vs, kss, vss = self._step(
+                plan.p_bucket, ks, vs, kss, vss,
                 op(plan.tokens), op(plan.seg_ids),
                 op(plan.positions), op(plan.write_idx),
                 tables, op(plan.sample_idx),
@@ -138,6 +147,7 @@ class Executor:
         finally:
             if ks is not None:
                 kv.put_kv(ks, vs)
+                kv.put_scales(kss, vss)
         self._compiled.add((plan.t_bucket, plan.p_bucket))
         return np.asarray(next_tokens), np.asarray(bad)
 
@@ -156,6 +166,8 @@ class Executor:
     # -- the jitted data plane -------------------------------------------
     def _unified_step(self, p_bucket: int, k_pages: List[jnp.ndarray],
                       v_pages: List[jnp.ndarray],
+                      k_scales: List[jnp.ndarray],
+                      v_scales: List[jnp.ndarray],
                       tokens: jnp.ndarray, seg_ids: jnp.ndarray,
                       positions: jnp.ndarray, write_idx: jnp.ndarray,
                       tables: jnp.ndarray, sample_idx: jnp.ndarray,
@@ -163,6 +175,7 @@ class Executor:
                       top_ks: jnp.ndarray, top_ps: jnp.ndarray,
                       seeds: jnp.ndarray
                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                 List[jnp.ndarray], List[jnp.ndarray],
                                  List[jnp.ndarray], List[jnp.ndarray]]:
         """Single replica: tokens/seg_ids/positions/write_idx (T,),
         tables (S, W>=P), sample_idx (S, K+1), sample_pos/temps/top_ks/
@@ -180,9 +193,9 @@ class Executor:
         cfg = self.cfg
         replicated = tokens.ndim == 2
         if not replicated:
-            x, new_k, new_v = self._body(
-                k_pages, v_pages, tokens, seg_ids, positions, write_idx,
-                tables[:, :p_bucket])
+            x, new_k, new_v, new_ks, new_vs = self._body(
+                k_pages, v_pages, k_scales, v_scales, tokens, seg_ids,
+                positions, write_idx, tables[:, :p_bucket])
             s, kp1 = sample_idx.shape
             xs = jnp.take(x, sample_idx.reshape(-1), axis=0)  # (S*(K+1), D)
         else:
@@ -191,16 +204,26 @@ class Executor:
             n_local = n_total // r
             k_r = [a.reshape(r, n_local, *a.shape[1:]) for a in k_pages]
             v_r = [a.reshape(r, n_local, *a.shape[1:]) for a in v_pages]
+            ks_r = [a.reshape(r, n_local, *a.shape[1:]) for a in k_scales]
+            vs_r = [a.reshape(r, n_local, *a.shape[1:]) for a in v_scales]
             tab_r = tables.reshape(r, tables.shape[0] // r,
                                    tables.shape[1])[:, :, :p_bucket]
-            x, new_k, new_v = jax.vmap(self._body)(
-                k_r, v_r, tokens, seg_ids, positions, write_idx, tab_r)
+            x, new_k, new_v, new_ks, new_vs = jax.vmap(self._body)(
+                k_r, v_r, ks_r, vs_r, tokens, seg_ids, positions,
+                write_idx, tab_r)
             new_k = [a.reshape(n_total, *a.shape[2:]) for a in new_k]
             new_v = [a.reshape(n_total, *a.shape[2:]) for a in new_v]
+            new_ks = [a.reshape(n_total, *a.shape[2:]) for a in new_ks]
+            new_vs = [a.reshape(n_total, *a.shape[2:]) for a in new_vs]
             if self._kv_sharding is not None:
                 cons = jax.lax.with_sharding_constraint
                 new_k = [cons(a, self._kv_sharding) for a in new_k]
                 new_v = [cons(a, self._kv_sharding) for a in new_v]
+                if self._scale_sharding is not None:
+                    new_ks = [cons(a, self._scale_sharding)
+                              for a in new_ks]
+                    new_vs = [cons(a, self._scale_sharding)
+                              for a in new_vs]
             _, s_r, kp1 = sample_idx.shape
             s = r * s_r
             # per-replica row gather out of (R, T, D) hidden states,
@@ -229,17 +252,20 @@ class Executor:
             logits, jnp.repeat(temps, kp1), jnp.repeat(top_ks, kp1),
             jnp.repeat(top_ps, kp1), jnp.repeat(seeds, kp1),
             gen_pos.reshape(-1))
-        return toks.reshape(s, kp1), bad, new_k, new_v
+        return toks.reshape(s, kp1), bad, new_k, new_v, new_ks, new_vs
 
     def _body(self, k_pages: List[jnp.ndarray], v_pages: List[jnp.ndarray],
+              k_scales: List[jnp.ndarray], v_scales: List[jnp.ndarray],
               tokens: jnp.ndarray, seg_ids: jnp.ndarray,
               positions: jnp.ndarray, write_idx: jnp.ndarray,
               tables: jnp.ndarray
-              ) -> Tuple[jnp.ndarray, List[jnp.ndarray], List[jnp.ndarray]]:
+              ) -> Tuple[jnp.ndarray, List[jnp.ndarray], List[jnp.ndarray],
+                         List[jnp.ndarray], List[jnp.ndarray]]:
         """One replica's transformer pass over its (n, ps, Hkv, hd) page
         slice: embed → layers (KV scatter + paged attention in place) →
         final norm.  Returns the (T, D) normed hidden states and the
-        updated page arrays; write_idx/tables are replica-LOCAL."""
+        updated page (and, quantized, scale) arrays; write_idx/tables
+        are replica-LOCAL."""
         cfg = self.cfg
         t = tokens.shape[0]
         n_pages, ps = k_pages[0].shape[0], k_pages[0].shape[1]
@@ -249,7 +275,8 @@ class Executor:
         if cfg.embed_scale:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
 
-        new_k, new_v = [], []
+        qmode = self._kv_quant
+        new_k, new_v, new_ks, new_vs = [], [], [], []
         for li, lp in enumerate(self._layer_params):
             h = L.rms_norm(x, lp["norm1"], cfg.norm_eps, cfg.norm_offset) \
                 if cfg.norm == "rms" else L.layer_norm(
@@ -268,17 +295,39 @@ class Executor:
             # prefix rows carry an OOB index and drop)
             kf = k_pages[li].reshape(n_pages * ps, cfg.n_kv_heads, cfg.hd)
             vf = v_pages[li].reshape(n_pages * ps, cfg.n_kv_heads, cfg.hd)
-            kf = kf.at[write_idx].set(k.astype(kf.dtype), mode="drop")
-            vf = vf.at[write_idx].set(v.astype(vf.dtype), mode="drop")
+            ks_p = vs_p = None
+            if qmode is None:
+                kf = kf.at[write_idx].set(k.astype(kf.dtype), mode="drop")
+                vf = vf.at[write_idx].set(v.astype(vf.dtype), mode="drop")
+            else:
+                # quantize on scatter: int8/fp8 codes into the pool,
+                # per-(token, head) scales into the parallel arrays at
+                # the SAME flat slots (same drop semantics)
+                kq, k_sc = quant.quantize(k, qmode)
+                vq, v_sc = quant.quantize(v, qmode)
+                kf = kf.at[write_idx].set(kq, mode="drop")
+                vf = vf.at[write_idx].set(vq, mode="drop")
+                ks_p = k_scales[li].reshape(n_pages * ps, cfg.n_kv_heads) \
+                    .at[write_idx].set(k_sc, mode="drop") \
+                    .reshape(n_pages, ps, cfg.n_kv_heads)
+                vs_p = v_scales[li].reshape(n_pages * ps, cfg.n_kv_heads) \
+                    .at[write_idx].set(v_sc, mode="drop") \
+                    .reshape(n_pages, ps, cfg.n_kv_heads)
+                new_ks.append(ks_p)
+                new_vs.append(vs_p)
             kp = kf.reshape(n_pages, ps, cfg.n_kv_heads, cfg.hd)
             vp = vf.reshape(n_pages, ps, cfg.n_kv_heads, cfg.hd)
             new_k.append(kp)
             new_v.append(vp)
 
             # attend the page pool in place through the block table
-            # (includes this step's writes; no per-slot gather)
-            o = paged_attention(q.astype(kp.dtype), kp, vp, tables,
+            # (includes this step's writes; no per-slot gather) — a
+            # quantized pool keeps q in compute dtype and dequantizes
+            # the pages in-kernel via the scale operands
+            o = paged_attention(q.astype(kp.dtype) if qmode is None
+                                else q, kp, vp, tables,
                                 seg_ids, positions, scale=scale,
+                                k_scale=ks_p, v_scale=vs_p,
                                 backend=self._attn_backend)
             x = x + o.reshape(t, -1).astype(x.dtype) @ lp["attn"]["wo"]
             if "mlp" in lp:
@@ -292,4 +341,4 @@ class Executor:
                        cfg.norm_offset) if cfg.norm == "rms" else \
             L.layer_norm(x, self.params["final_norm"],
                          self.params.get("final_norm_b"), cfg.norm_eps)
-        return x, new_k, new_v
+        return x, new_k, new_v, new_ks, new_vs

@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import quant
+
 
 import warnings
 
@@ -207,7 +209,8 @@ class PagedKVCache:
 
     def __init__(self, *, n_layers: int, n_kv_heads: int, head_dim: int,
                  page_size: int = 16, num_pages: int = 256,
-                 dtype=jnp.bfloat16, n_replicas: int = 1):
+                 dtype=jnp.bfloat16, n_replicas: int = 1,
+                 kv_dtype: Optional[str] = None):
         self.n_layers = n_layers
         self.n_kv_heads = n_kv_heads
         self.head_dim = head_dim
@@ -215,6 +218,19 @@ class PagedKVCache:
         self.n_replicas = n_replicas
         self.pool = PagePool(num_pages, n_replicas)
         self.pages_per_replica = self.pool.pages_per_replica
+        # quantized pool: pages hold int8/fp8_e4m3 CODES, with fp32
+        # per-(token, head) scales in parallel (N, ps, Hkv) arrays —
+        # page-shaped so COW/truncate/scrub/recover carry scales with
+        # their pages by construction (the scales-layout contract,
+        # docs/kernels.md)
+        self.quant_mode = quant.canonical(kv_dtype)
+        if self.quant_mode is not None:
+            dtype = quant.storage_dtype(self.quant_mode)
+        elif kv_dtype in ("fp32", "float32"):
+            dtype = jnp.float32
+        elif kv_dtype in ("bf16", "bfloat16"):
+            dtype = jnp.bfloat16
+        self.kv_dtype_name = self.quant_mode or np.dtype(dtype).name
         # sequence id -> owning data replica (every page of a sequence
         # lives in ONE replica's contiguous range; its block-table mirror
         # row therefore holds replica-LOCAL page ids)
@@ -224,6 +240,14 @@ class PagedKVCache:
             jnp.zeros(shape, dtype) for _ in range(n_layers)]
         self.v: Optional[List[jnp.ndarray]] = [
             jnp.zeros(shape, dtype) for _ in range(n_layers)]
+        sshape = (num_pages, page_size, n_kv_heads)
+        self.k_scale: Optional[List[jnp.ndarray]] = None
+        self.v_scale: Optional[List[jnp.ndarray]] = None
+        if self.quant_mode is not None:
+            self.k_scale = [jnp.zeros(sshape, jnp.float32)
+                            for _ in range(n_layers)]
+            self.v_scale = [jnp.zeros(sshape, jnp.float32)
+                            for _ in range(n_layers)]
         self.dtype = dtype
         # sequence id -> (block_table, valid-KV length)
         self.tables: Dict[int, List[int]] = {}
@@ -253,6 +277,7 @@ class PagedKVCache:
         # whose out_shardings pin the mirror's sharding so a dirty-row
         # delta flush can never silently reshard the whole mirror
         self._kv_sharding = None
+        self._scale_sharding = None
         self._mirror_sharding = None
         self._scatter = _scatter_rows
 
@@ -408,11 +433,20 @@ class PagedKVCache:
         for layer in range(self.n_layers):
             self.k[layer] = self.k[layer].at[idx].set(0)
             self.v[layer] = self.v[layer].at[idx].set(0)
+            if self.k_scale is not None:
+                # scrubbed codes must dequantize to zero too
+                self.k_scale[layer] = self.k_scale[layer].at[idx].set(0)
+                self.v_scale[layer] = self.v_scale[layer].at[idx].set(0)
         if self._kv_sharding is not None:
             # eager scatters may drop the placement; re-pin so the next
             # unified_step sees the SAME input shardings (no recompile)
             self.k = [jax.device_put(a, self._kv_sharding) for a in self.k]
             self.v = [jax.device_put(a, self._kv_sharding) for a in self.v]
+            if self.k_scale is not None:
+                self.k_scale = [jax.device_put(a, self._scale_sharding)
+                                for a in self.k_scale]
+                self.v_scale = [jax.device_put(a, self._scale_sharding)
+                                for a in self.v_scale]
 
     def ensure_capacity(self, seq_id: int, n_tokens: int) -> bool:
         """Grow the block table so ``n_tokens`` positions have pages.
@@ -503,6 +537,12 @@ class PagedKVCache:
                     self.k[layer][page])
                 self.v[layer] = self.v[layer].at[new_page].set(
                     self.v[layer][page])
+                if self.k_scale is not None:
+                    # the scales travel with their page's codes
+                    self.k_scale[layer] = self.k_scale[layer].at[
+                        new_page].set(self.k_scale[layer][page])
+                    self.v_scale[layer] = self.v_scale[layer].at[
+                        new_page].set(self.v_scale[layer][page])
             self.pool.release(page)
             table[page_pos] = new_page
             self.pool.stats.cow_copies += 1
@@ -530,6 +570,13 @@ class PagedKVCache:
         if page is None:
             return False
         for layer, (k_t, v_t) in enumerate(layer_kv):
+            if self.quant_mode is not None:
+                k_t, k_sc = quant.quantize(k_t, self.quant_mode)
+                v_t, v_sc = quant.quantize(v_t, self.quant_mode)
+                self.k_scale[layer] = self.k_scale[layer].at[
+                    page, offset].set(k_sc)
+                self.v_scale[layer] = self.v_scale[layer].at[
+                    page, offset].set(v_sc)
             self.k[layer] = self.k[layer].at[page, offset].set(
                 k_t.astype(self.k[layer].dtype))
             self.v[layer] = self.v[layer].at[page, offset].set(
@@ -564,6 +611,17 @@ class PagedKVCache:
         idx = jnp.asarray(self.flat_slots(seq_id, start, end))
         npg, ps = self.pool.num_pages, self.page_size
         for layer, (k_s, v_s) in enumerate(layer_kv):
+            if self.quant_mode is not None:
+                # quantize on scatter: codes into the pool, per-token
+                # scales into the parallel array at the SAME flat slots
+                k_s, k_sc = quant.quantize(k_s, self.quant_mode)
+                v_s, v_sc = quant.quantize(v_s, self.quant_mode)
+                self.k_scale[layer] = self.k_scale[layer].reshape(
+                    npg * ps, self.n_kv_heads).at[idx].set(
+                    k_sc).reshape(npg, ps, self.n_kv_heads)
+                self.v_scale[layer] = self.v_scale[layer].reshape(
+                    npg * ps, self.n_kv_heads).at[idx].set(
+                    v_sc).reshape(npg, ps, self.n_kv_heads)
             kf = self.k[layer].reshape(npg * ps, self.n_kv_heads,
                                        self.head_dim)
             vf = self.v[layer].reshape(npg * ps, self.n_kv_heads,
@@ -668,7 +726,8 @@ class PagedKVCache:
         t = self.tables[sid][:width]
         return t if off == 0 else [p - off for p in t]
 
-    def place_on_mesh(self, kv_sharding, mirror_sharding) -> None:
+    def place_on_mesh(self, kv_sharding, mirror_sharding,
+                      scale_sharding=None) -> None:
         """Pin the page pool and block-table mirror to a device mesh.
 
         ``kv_sharding`` shards each per-layer (num_pages, page, kv, hd)
@@ -695,6 +754,12 @@ class PagedKVCache:
         if self.k is not None:
             self.k = [jax.device_put(a, kv_sharding) for a in self.k]
             self.v = [jax.device_put(a, kv_sharding) for a in self.v]
+        if self.k_scale is not None and scale_sharding is not None:
+            self._scale_sharding = scale_sharding
+            self.k_scale = [jax.device_put(a, scale_sharding)
+                            for a in self.k_scale]
+            self.v_scale = [jax.device_put(a, scale_sharding)
+                            for a in self.v_scale]
         self._mirror = None            # next device_tables: placed rebuild
 
     def take_kv(self) -> Tuple[List[jnp.ndarray], List[jnp.ndarray]]:
@@ -708,6 +773,27 @@ class PagedKVCache:
 
     def put_kv(self, ks: List[jnp.ndarray], vs: List[jnp.ndarray]) -> None:
         self.k, self.v = list(ks), list(vs)
+
+    def take_scales(self) -> Tuple[List[jnp.ndarray], List[jnp.ndarray]]:
+        """Donation hook for the quantized pool's scale arrays — the
+        scales half of the donation invariant: they cross into the
+        jitted step WITH the code pages (same scatter indices, same
+        donate/return round-trip) and the host holds no alias while
+        taken.  Returns empty lists for an unquantized pool, so callers
+        need no mode branch."""
+        if self.quant_mode is None:
+            return [], []
+        ks, vs = self.k_scale, self.v_scale
+        assert ks is not None, \
+            "KV scale arrays already taken (donation hazard)"
+        self.k_scale = self.v_scale = None
+        return ks, vs
+
+    def put_scales(self, ks: List[jnp.ndarray],
+                   vs: List[jnp.ndarray]) -> None:
+        if self.quant_mode is None:
+            return
+        self.k_scale, self.v_scale = list(ks), list(vs)
 
     def gather(self, seq_ids: Sequence[int], layer: int,
                pad_to: Optional[int] = None
@@ -726,6 +812,13 @@ class PagedKVCache:
         idx = jnp.asarray(tables)                       # (B, P)
         k = jnp.take(self.k[layer], idx, axis=0)        # (B,P,page,kv,hd)
         v = jnp.take(self.v[layer], idx, axis=0)
+        if self.quant_mode is not None:
+            # host oracle path: dequantize the gathered pages (codes ×
+            # per-token scales) so callers always see fp32 K/V
+            k = quant.dequantize(
+                k, jnp.take(self.k_scale[layer], idx, axis=0))
+            v = quant.dequantize(
+                v, jnp.take(self.v_scale[layer], idx, axis=0))
         b = len(seq_ids)
         k = k.reshape(b, max_pages * self.page_size, self.n_kv_heads,
                       self.head_dim)[:, :pad_to].transpose(0, 2, 1, 3)
@@ -735,13 +828,20 @@ class PagedKVCache:
         return k, v, lens
 
     def memory_stats(self) -> Dict[str, float]:
+        # per-page resident bytes: K+V codes at the storage itemsize,
+        # plus (quantized pools) the fp32 per-(token, head) scales
         page_bytes = (self.page_size * self.n_kv_heads * self.head_dim
                       * 2 * np.dtype(self.dtype).itemsize * self.n_layers)
+        if self.quant_mode is not None:
+            page_bytes += (self.page_size * self.n_kv_heads * 2 * 4
+                           * self.n_layers)
         used = self.pool.num_pages - self.pool.num_free
         return {
             "pages_total": self.pool.num_pages,
             "pages_used": used,
             "pages_free": self.pool.num_free,
+            "page_bytes": page_bytes,
+            "kv_dtype": self.kv_dtype_name,
             "bytes_used": used * page_bytes,
             "kv_bytes": self.pool.num_pages * page_bytes,
             "page_hwm": self.pool.stats.page_hwm,

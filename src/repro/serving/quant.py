@@ -1,0 +1,91 @@
+"""KV quantization math — shared by the page pool (host scatters) and
+the executor (in-jit quantize-on-scatter).
+
+The paged KV cache stores int8 / fp8_e4m3 CODES in the page arrays and
+fp32 SCALES in parallel ``(num_pages, page_size, n_kv_heads)`` arrays
+beside them (the "scales-layout contract", documented in
+``docs/kernels.md``).  Scale granularity is per (token, kv-head): one
+absmax scale per written K/V vector.  Finer than per-page on purpose —
+a decode append that raises a page's absmax would otherwise force a
+dequant/requant rewrite of every code already in that page, turning the
+O(1) decode scatter into an O(page) read-modify-write.  Per-vector
+scales keep every write independent, so the executor's flat
+``write_idx`` scatter works unchanged: codes land in the pool, scales
+land at the same flat (page*page_size + offset, head) slot.
+
+Scales are stored page-shaped so every page-granular pool operation
+(COW copy, truncate, quarantine scrub, recovery) carries them with the
+page by construction.
+
+Scheme: symmetric absmax.  ``scale = max|x| / QMAX`` over the head_dim
+axis, ``code = round(x / scale)`` clipped to ±127 (int8) or cast to
+fp8_e4m3 (QMAX 448, the format's largest finite value);
+``dequant = code * scale``.  An all-zero vector stores scale 0 and
+dequantizes to exact zeros — unwritten pool slots therefore read as
+zeros, same as the fp32 pool.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# largest code magnitude per format: int8 symmetric (no -128, so the
+# scheme stays symmetric under negation), fp8 e4m3's largest finite
+QMAX = {"int8": 127.0, "fp8_e4m3": 448.0}
+
+_ALIASES = {"fp8": "fp8_e4m3", "float8": "fp8_e4m3",
+            "float8_e4m3fn": "fp8_e4m3"}
+
+
+def canonical(kv_dtype: Optional[str]) -> Optional[str]:
+    """Normalize a ``kv_dtype`` knob to a quantization mode: ``None``
+    for the unquantized pool (``None``/"fp32"/"float32"), else
+    "int8" / "fp8_e4m3" (aliases "fp8", "float8" accepted)."""
+    if kv_dtype is None or kv_dtype in ("fp32", "float32", "bf16",
+                                        "bfloat16"):
+        return None
+    mode = _ALIASES.get(kv_dtype, kv_dtype)
+    if mode not in QMAX:
+        raise ValueError(
+            f"unknown kv_dtype {kv_dtype!r}; expected one of "
+            f"fp32, int8, fp8_e4m3")
+    return mode
+
+
+def storage_dtype(mode: str):
+    """The pool array dtype for a quantization mode."""
+    if mode == "int8":
+        return jnp.int8
+    dt = getattr(jnp, "float8_e4m3fn", None)
+    if dt is None:                      # pragma: no cover - old jax
+        raise ValueError("kv_dtype=fp8_e4m3 needs a jax with "
+                         "jnp.float8_e4m3fn; use int8 or fp32")
+    return dt
+
+
+def quantize(x: jnp.ndarray, mode: str
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize K/V vectors along the trailing head_dim axis.
+
+    ``x``: (..., head_dim) float.  Returns ``(codes, scales)`` with
+    codes (..., head_dim) in the storage dtype and scales (...,) fp32.
+    Traceable — the executor runs it inside the jitted unified step."""
+    x = x.astype(jnp.float32)
+    qmax = QMAX[mode]
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = amax / qmax
+    # all-zero vectors: divide by 1, store scale 0 -> exact zeros back
+    y = x / jnp.where(scale > 0, scale, 1.0)[..., None]
+    if mode == "int8":
+        codes = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:
+        codes = y.astype(storage_dtype(mode))
+    return codes, scale
+
+
+def dequantize(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize`: (..., hd) codes × (...,) scales ->
+    (..., hd) fp32."""
+    return codes.astype(jnp.float32) * scales[..., None]

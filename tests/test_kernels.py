@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.serving import quant
 
 KEY = jax.random.key(7)
 
@@ -22,6 +23,17 @@ TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
 
 # acceptance bound for the paged-attention kernel (f32 serving shapes)
 PAGED_TOL_F32 = dict(rtol=1e-5, atol=1e-5)
+
+# quantization tolerance tiers (docs/kernels.md "Quantized paged KV"):
+# drift of a quantized pool's attention output vs the fp32-pool oracle.
+# Kernel-vs-ref parity on the SAME quantized inputs stays at the f32
+# bound — both sides dequantize identical codes, so the only error is
+# the same online-softmax reassociation fp32 already tolerates.
+# Measured drift on N(0,1) pools: int8 ~1e-2 (7.9-bit mantissa at
+# per-(token, head) absmax scaling), fp8_e4m3 ~7e-2 (3-bit mantissa).
+KV_TIERS = {"fp32": PAGED_TOL_F32,
+            "int8": dict(rtol=5e-2, atol=5e-2),
+            "fp8_e4m3": dict(rtol=1.5e-1, atol=1.5e-1)}
 
 
 class TestFlashAttention:
@@ -214,6 +226,137 @@ class TestPagedAttention:
         exp = ops.mixed_attention(q, kc, vc, seg, pos)
         np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                    rtol=1e-5, atol=1e-5)
+
+    # ---- quantized KV tier (int8 / fp8_e4m3 codes + per-token scales)
+
+    def _quant_pool(self, kp, vp, kv_dtype):
+        """Quantize an fp32 pool into (codes, scales); fp32 passthrough."""
+        if kv_dtype == "fp32":
+            return kp, vp, None, None
+        kc, ksc = quant.quantize(kp, kv_dtype)
+        vc, vsc = quant.quantize(vp, kv_dtype)
+        return kc, vc, ksc, vsc
+
+    def _check_tier(self, q, kp, vp, tables, seg, pos, kv_dtype,
+                    window=None):
+        """Two bounds per tier: kernel-vs-ref parity on the SAME
+        quantized inputs at the fp32 tolerance (both sides dequantize
+        identical codes), and drift vs the fp32-pool oracle at the
+        documented tier bound."""
+        kc, vc, ksc, vsc = self._quant_pool(kp, vp, kv_dtype)
+        out = ops.paged_attention(q, kc, vc, tables, seg, pos,
+                                  window=window, k_scale=ksc,
+                                  v_scale=vsc)
+        exp = ref.paged_attention(q, kc, vc, tables, seg, pos,
+                                  window=window, k_scale=ksc,
+                                  v_scale=vsc)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   **PAGED_TOL_F32)
+        oracle = ref.paged_attention(q, kp, vp, tables, seg, pos,
+                                     window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   **KV_TIERS[kv_dtype])
+        return out
+
+    @pytest.mark.parametrize("window", [None, 6])
+    @pytest.mark.parametrize("kv_dtype", sorted(KV_TIERS))
+    def test_quant_mixed_prefill_decode(self, kv_dtype, window):
+        """Quantized pools through the mixed prefill/decode batch."""
+        n_pages, ps, hkv, d, hq = 24, 4, 2, 32, 4
+        kp = rand(70, (n_pages, ps, hkv, d))
+        vp = rand(71, (n_pages, ps, hkv, d))
+        q = rand(72, (7, hq, d))
+        tables = self._tables(3, 4, n_pages, 73)
+        seg = jnp.asarray([0, 0, 1, 2, 2, 2, -1], jnp.int32)
+        pos = jnp.asarray([3, 4, 0, 10, 14, 15, 0], jnp.int32)
+        self._check_tier(q, kp, vp, tables, seg, pos, kv_dtype,
+                         window=window)
+
+    @pytest.mark.parametrize("kv_dtype", sorted(KV_TIERS))
+    def test_quant_ragged_page_counts(self, kv_dtype):
+        """Padding pages past each sequence's end must stay masked even
+        though their (zero) scales dequantize them to exact zeros."""
+        n_pages, ps, hkv, d, hq = 40, 8, 2, 16, 8
+        kp = rand(74, (n_pages, ps, hkv, d))
+        vp = rand(75, (n_pages, ps, hkv, d))
+        q = rand(76, (4, hq, d))
+        tables = np.zeros((4, 4), np.int32)
+        tables[0, :1] = [5]
+        tables[1, :4] = [7, 9, 11, 13]
+        tables[2, :2] = [2, 3]
+        tables[3, :1] = [17]
+        seg = jnp.asarray([0, 1, 2, 3], jnp.int32)
+        pos = jnp.asarray([2, 29, 11, 0], jnp.int32)
+        self._check_tier(q, kp, vp, jnp.asarray(tables), seg, pos,
+                         kv_dtype)
+
+    @pytest.mark.parametrize("kv_dtype", sorted(KV_TIERS))
+    def test_quant_shared_prefix_pages(self, kv_dtype):
+        """Shared physical prefix pages share ONE set of codes+scales;
+        both referencing slots must dequantize them identically."""
+        n_pages, ps, hkv, d, hq = 16, 4, 2, 16, 4
+        kp = rand(77, (n_pages, ps, hkv, d))
+        vp = rand(78, (n_pages, ps, hkv, d))
+        q = rand(79, (2, hq, d))
+        tables = jnp.asarray([[3, 5, 8, 0], [3, 5, 9, 0]], jnp.int32)
+        seg = jnp.asarray([0, 1], jnp.int32)
+        pos = jnp.asarray([10, 11], jnp.int32)
+        out = self._check_tier(q, kp, vp, tables, seg, pos, kv_dtype)
+        # divergent tails -> divergent outputs even at equal positions
+        kc, vc, ksc, vsc = self._quant_pool(kp, vp, kv_dtype)
+        q_same = jnp.stack([q[0], q[0]])
+        pos_same = jnp.asarray([11, 11], jnp.int32)
+        o = ops.paged_attention(q_same, kc, vc, tables, seg, pos_same,
+                                k_scale=ksc, v_scale=vsc)
+        assert not np.allclose(np.asarray(o[0]), np.asarray(o[1]))
+        assert np.isfinite(np.asarray(out)).all()
+
+    @pytest.mark.parametrize("kv_dtype", sorted(KV_TIERS))
+    def test_multi_page_tiles_bitwise(self, kv_dtype):
+        """pages_per_tile is a pure grid re-packing: every tile size
+        must produce BITWISE-identical outputs (the kernel unrolls the
+        same per-page online-softmax updates in the same order)."""
+        n_pages, ps, hkv, d, hq = 24, 4, 2, 32, 4
+        kp = rand(70, (n_pages, ps, hkv, d))
+        vp = rand(71, (n_pages, ps, hkv, d))
+        q = rand(72, (7, hq, d))
+        tables = self._tables(3, 4, n_pages, 73)
+        seg = jnp.asarray([0, 0, 1, 2, 2, 2, -1], jnp.int32)
+        pos = jnp.asarray([3, 4, 0, 10, 14, 15, 0], jnp.int32)
+        kc, vc, ksc, vsc = self._quant_pool(kp, vp, kv_dtype)
+        base = ops.paged_attention(q, kc, vc, tables, seg, pos,
+                                   k_scale=ksc, v_scale=vsc,
+                                   pages_per_tile=1)
+        for ppt in (2, 3, 4, 7):          # 7 > p_pages exercises clamp
+            tiled = ops.paged_attention(q, kc, vc, tables, seg, pos,
+                                        k_scale=ksc, v_scale=vsc,
+                                        pages_per_tile=ppt)
+            np.testing.assert_array_equal(np.asarray(base),
+                                          np.asarray(tiled))
+
+    def test_multi_page_tiles_with_window(self):
+        """Tile packing composes with sliding-window masking."""
+        n_pages, ps, hkv, d, hq = 24, 4, 2, 32, 4
+        kp = rand(74, (n_pages, ps, hkv, d))
+        vp = rand(75, (n_pages, ps, hkv, d))
+        q = rand(76, (7, hq, d))
+        tables = self._tables(3, 4, n_pages, 77)
+        seg = jnp.asarray([0, 0, 1, 2, 2, 2, -1], jnp.int32)
+        pos = jnp.asarray([3, 4, 0, 10, 14, 15, 0], jnp.int32)
+        exp = ref.paged_attention(q, kp, vp, tables, seg, pos, window=6)
+        for ppt in (1, 2, 4):
+            out = ops.paged_attention(q, kp, vp, tables, seg, pos,
+                                      window=6, pages_per_tile=ppt)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                       **PAGED_TOL_F32)
+
+    def test_default_pages_per_tile_heuristic(self):
+        """The auto heuristic packs ~BLOCK_K tokens per tile, clamped
+        to the table width and a cap of 8 pages."""
+        assert ops.default_pages_per_tile(4, 4) == 4
+        assert ops.default_pages_per_tile(8, 64) == 8
+        assert ops.default_pages_per_tile(256, 16) == 1
+        assert ops.default_pages_per_tile(64, 2) == 2
 
 
 class TestRWKV6:

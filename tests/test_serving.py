@@ -14,6 +14,7 @@ from repro.serving.engine import ServingEngine
 from repro.serving.errors import (AdmissionRejected, BucketOverflow,
                                   DeadlineExceeded, PoolExhausted,
                                   RequestFailed)
+from repro.serving import quant
 from repro.serving.kv_cache import PagedKVCache, PagePool
 from repro.serving.legacy import LegacyServingEngine
 from repro.serving.scheduler import RequestState, pow2_bucket
@@ -417,6 +418,152 @@ class TestRefcountConservation:
         st = eng.kv.pool.stats
         assert st.allocated_pages == st.freed_pages
         assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+
+
+class TestQuantizedPoolChurn:
+    """Quantized (int8/fp8_e4m3) page pools: the per-token scale arrays
+    must stay shape- AND index-aligned with their code pools through
+    every page-lifecycle event — COW, truncate, scrub, recover — and a
+    randomized engine churn must conserve pages while the finished
+    outputs track the fp32 dense oracle within the tier bound."""
+
+    def _assert_aligned(self, kv):
+        """Scales are parallel (N, ps, Hkv) fp32 arrays beside the
+        (N, ps, Hkv, hd) code pools — one scale per stored vector."""
+        for l in range(kv.n_layers):
+            assert kv.k[l].shape[:-1] == kv.k_scale[l].shape
+            assert kv.v[l].shape[:-1] == kv.v_scale[l].shape
+            assert kv.k_scale[l].dtype == jnp.float32
+
+    @pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+    def test_scales_track_cow_truncate_recover(self, kv_dtype):
+        """Content round-trips: gather() over a quantized pool must
+        return dequantize(quantize(x)) for exactly the vectors written,
+        across write_batch, prefix-shared pages, COW, truncate + refill,
+        and a recover() pass."""
+        n_layers, hkv, hd, ps = 2, 2, 8, 4
+        kv = PagedKVCache(n_layers=n_layers, n_kv_heads=hkv, head_dim=hd,
+                          page_size=ps, num_pages=16, kv_dtype=kv_dtype)
+        self._assert_aligned(kv)
+        toks = list(range(1, 9))                       # 2 full pages
+        key = jax.random.key(11)
+        xs = [jax.random.normal(jax.random.fold_in(key, i), (8, hkv, hd))
+              for i in range(2 * n_layers)]
+
+        def expect(x):                                 # the storage oracle
+            return np.asarray(quant.dequantize(*quant.quantize(
+                x, kv_dtype)))
+
+        assert kv.create(0, toks)
+        assert kv.write_batch(0, [(xs[2 * l], xs[2 * l + 1])
+                                  for l in range(n_layers)], 0, 8)
+        kv.lengths[0] = 8
+        self._assert_aligned(kv)
+        for l in range(n_layers):
+            k, v, _ = kv.gather([0], l)
+            np.testing.assert_allclose(np.asarray(k[0]),
+                                       expect(xs[2 * l]).transpose(1, 0, 2),
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(v[0]),
+                                       expect(xs[2 * l + 1]).transpose(1, 0, 2),
+                                       rtol=1e-6, atol=1e-6)
+
+        # prefix sharing then COW through the sharer: seq 0's view of
+        # the shared page must be byte-stable (scales copied with codes)
+        assert kv.create(1, toks)
+        assert kv.pool.stats.prefix_hits == 2
+        div = jax.random.normal(jax.random.fold_in(key, 99), (hkv, hd))
+        kv.lengths[1] = 7                # overwrite last slot of page 2
+        assert kv.append(1, [(div, div)] * n_layers)
+        assert kv.pool.stats.cow_copies == 1
+        self._assert_aligned(kv)
+        k0, _, _ = kv.gather([0], 0)
+        np.testing.assert_allclose(np.asarray(k0[0]),
+                                   expect(xs[0]).transpose(1, 0, 2),
+                                   rtol=1e-6, atol=1e-6)
+        k1, _, _ = kv.gather([1], 0)
+        np.testing.assert_allclose(np.asarray(k1[0, :, :7]),
+                                   expect(xs[0]).transpose(1, 0, 2)[:, :7],
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(k1[0, :, 7]), expect(div),
+                                   rtol=1e-6, atol=1e-6)
+
+        # truncate + refill: the freed tail page's scales must not leak
+        # into the fresh content written over it
+        assert kv.truncate(0, 4)
+        fresh = jax.random.normal(jax.random.fold_in(key, 123),
+                                  (4, hkv, hd))
+        assert kv.write_batch(0, [(fresh, fresh)] * n_layers, 4, 8)
+        kv.lengths[0] = 8
+        k0, _, _ = kv.gather([0], 0)
+        np.testing.assert_allclose(np.asarray(k0[0, :, 4:]),
+                                   expect(fresh).transpose(1, 0, 2),
+                                   rtol=1e-6, atol=1e-6)
+
+        # recover() reconciles an injected refcount leak and must keep
+        # both live sequences' dequantized content intact
+        page = kv.pool.free.pop()
+        kv.pool.refs[page] = 1
+        assert kv.recover() >= 1
+        self._assert_aligned(kv)
+        k1, _, _ = kv.gather([1], 0)
+        np.testing.assert_allclose(np.asarray(k1[0, :, 7]), expect(div),
+                                   rtol=1e-6, atol=1e-6)
+        kv.free_seq(0)
+        kv.free_seq(1)
+        assert kv.pool.num_free == kv.pool.num_pages
+
+    @pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+    def test_randomized_churn_conserves_and_tracks_oracle(self, kv_dtype):
+        """Randomized submit/cancel/recover churn over a quantized
+        engine: page conservation and scale alignment hold at every
+        step; finished greedy outputs agree with the fp32 dense-cache
+        oracle at or above the tier's token-agreement floor."""
+        floors = {"int8": 0.75, "fp8_e4m3": 0.35}
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params, page_size=4, num_pages=24,
+                            max_batch=3, chunk_size=4, token_budget=8,
+                            kv_dtype=kv_dtype)
+        rng = random.Random(9 if kv_dtype == "int8" else 10)
+        prompts, ids, cancelled = {}, [], set()
+        finished = []
+        for step in range(300):
+            if len(ids) < 10 and rng.random() < 0.4:
+                n = rng.randint(1, 14)
+                base = rng.choice([0, 40])       # some shared prefixes
+                p = [(base + j) % 97 for j in range(n)]
+                rid = eng.submit(p, max_new_tokens=rng.randint(2, 5))
+                prompts[rid] = p
+                ids.append(rid)
+            if ids and rng.random() < 0.08:
+                victim = rng.choice(ids)
+                if eng.cancel(victim):
+                    cancelled.add(victim)
+            if rng.random() < 0.05:
+                eng.kv.recover()                 # repair pass mid-churn
+            finished.extend(eng.step())
+            st = eng.kv.pool.stats
+            held = len(eng.kv.pool.refs)
+            assert st.allocated_pages == st.freed_pages + held
+            assert held + eng.kv.pool.num_free == eng.kv.pool.num_pages
+            self._assert_aligned(eng.kv)
+            if len(ids) >= 10 and not eng.waiting and not eng.running:
+                break
+        finished.extend(eng.run())
+        assert eng.kv.pool.num_free == eng.kv.pool.num_pages
+        assert eng.metrics["kv_dtype"] == kv_dtype
+        done = [r for r in finished if r.req_id not in cancelled]
+        assert len(done) >= 6
+        agree = total = 0
+        for r in done:
+            oracle = dense_rollout(cfg, params, prompts[r.req_id],
+                                   len(r.out_tokens))
+            agree += sum(a == b for a, b in zip(r.out_tokens, oracle))
+            total += len(oracle)
+        assert total > 0
+        assert agree / total >= floors[kv_dtype], \
+            f"{kv_dtype} agreement {agree}/{total} below floor"
 
 
 class TestCancellation:
